@@ -1,0 +1,118 @@
+"""Shared benchmark helpers: workload export, host ground truth, CSV."""
+from __future__ import annotations
+
+import csv
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Write CSV artifact + print `name,us_per_call,derived` lines."""
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.csv")
+    if rows:
+        fields: list[str] = []
+        for r in rows:
+            for k in r:
+                if k not in fields:
+                    fields.append(k)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields)
+            w.writeheader()
+            w.writerows(rows)
+    for r in rows:
+        us = r.get("us_per_call", r.get("predicted_us", ""))
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{us},{derived}")
+
+
+def build_llama_step(arch: str, seq: int, batch: int, mesh,
+                     train: bool = True, cfg_overrides: dict | None = None):
+    """jitted train step + abstract args + concrete args for an LM arch."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeConfig
+    from repro.distributed.sharding import ShardingRules
+    from repro.models import get_config, input_specs, model_specs
+    from repro.models.params import abstract_params, init_params
+    from repro.models.transformer import forward
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    rules = ShardingRules()
+    specs = model_specs(cfg)
+    shape = ShapeConfig("bench", seq, batch, "train" if train else "prefill")
+    params_abs = abstract_params(specs, mesh, rules)
+    batch_abs = input_specs(cfg, shape, mesh, rules)
+    if train:
+        opt_cfg = OptimizerConfig()
+        init_fn, _ = make_optimizer(opt_cfg)
+        step = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+
+        def concrete(key):
+            params = init_params(specs, key)
+            params = jax.tree.map(
+                lambda x, s: jax.device_put(x, s.sharding),
+                params, params_abs)
+            opt = init_fn(params, opt_cfg)
+            import numpy as np
+            rng = np.random.default_rng(0)
+            b = {"tokens": jnp.asarray(rng.integers(
+                    0, cfg.vocab_size, (batch, seq), dtype="int32")),
+                 "targets": jnp.asarray(rng.integers(
+                    0, cfg.vocab_size, (batch, seq), dtype="int32"))}
+            b = {k: jax.device_put(v, batch_abs[k].sharding)
+                 for k, v in b.items()}
+            return params, opt, b
+
+        # abstract opt state with shardings for lowering
+        from repro.launch.dryrun import _opt_state_abstract
+        opt_abs = _opt_state_abstract(specs, "adamw", mesh, rules)
+        return cfg, jitted, (params_abs, opt_abs, batch_abs), concrete
+    from repro.models.transformer import prefill
+    fn = jax.jit(lambda p, b: prefill(cfg, p, b))
+    return cfg, fn, (params_abs, batch_abs), None
+
+
+def measure(fn, args, runs: int = 3) -> float:
+    """Median wall seconds of a jitted call (post-warmup)."""
+    import jax
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    args = _rotate_donated(fn, args, out)
+    times = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, out)
+        times.append(time.perf_counter() - t0)
+        args = _rotate_donated(fn, args, out)
+    return statistics.median(times)
+
+
+def _rotate_donated(fn, args, out):
+    """If the jitted fn donates (params, opt), reuse outputs as next inputs."""
+    if isinstance(out, tuple) and len(out) == 3 and isinstance(args, tuple):
+        if len(args) == 3:
+            return (out[0], out[1], args[2])
+        if len(args) == 4:                 # resnet: (params, opt, imgs, lbls)
+            return (out[0], out[1], args[2], args[3])
+    return args
+
+
+def mape(pred: float, ref: float) -> float:
+    return abs(pred - ref) / ref * 100.0

@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+"""Paper Fig 7: training-step latency for ResNet variants on a 4-GPU A100
+system (data parallel).  Host-validated structural claims at reduced batch
+(the estimator-ordering property is batch-independent), full-batch (256 per
+device, FP16 — paper Table III) A100 predictions from the same export."""
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+from benchmarks.common import emit, mape, measure  # noqa: E402
+
+
+def _build(depth: int, batch: int, img: int, mesh, barriers: bool = False):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.distributed.sharding import act_sharding, param_sharding
+    from repro.models.params import abstract_params, init_params
+    from repro.models.resnet import ResNetConfig, resnet_forward, resnet_specs
+    from repro.train.optimizer import OptimizerConfig, adamw_update, adamw_init
+
+    cfg = ResNetConfig(depth=depth, block_barriers=barriers)
+    specs = resnet_specs(cfg)
+    opt_cfg = OptimizerConfig(name="adamw")
+
+    def step(params, opt, images, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: resnet_forward(cfg, p, images, labels)[0])(params)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    jitted = jax.jit(step, donate_argnums=(0, 1))
+    params_abs = abstract_params(specs, mesh)
+    img_sh = act_sharding(("batch", "seq", "seq", "embed"), mesh, None,
+                          (batch, img, img, 3))
+    lbl_sh = act_sharding(("batch",), mesh, None, (batch,))
+    imgs = jax.ShapeDtypeStruct((batch, img, img, 3), jnp.float16,
+                                sharding=img_sh)
+    lbls = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=lbl_sh)
+    from repro.launch.dryrun import _opt_state_abstract
+    opt_abs = _opt_state_abstract(specs, "adamw", mesh, None)
+
+    def concrete(key):
+        params = init_params(specs, key)
+        params = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
+                              params, params_abs)
+        opt = adamw_init(params, opt_cfg)
+        rng = np.random.default_rng(0)
+        return (params, opt,
+                jax.device_put(jnp.asarray(
+                    rng.standard_normal((batch, img, img, 3),
+                                        dtype=np.float32).astype(np.float16)),
+                    img_sh),
+                jax.device_put(jnp.asarray(
+                    rng.integers(0, 1000, batch, dtype=np.int32)), lbl_sh))
+
+    return jitted, (params_abs, opt_abs, imgs, lbls), concrete
+
+
+def main() -> None:
+    import jax
+    from repro.core.estimators import ProfilingEstimator, RooflineEstimator
+    from repro.core.network import AllToAllNode
+    from repro.core.pipeline import export_workload, predict
+    from repro.core.systems import A100, host_system
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 1), ("data", "model"))
+    host = host_system()
+    host_topo = AllToAllNode(num_devices=4,
+                             link_bw=host.interconnect.link_bw)
+    a100_topo = AllToAllNode(num_devices=4, link_bw=100e9)
+    rows = []
+
+    # host-validated (small batch / image so ground truth runs in seconds)
+    for depth in (18, 50):
+        jitted, abs_args, concrete = _build(depth, batch=8, img=64,
+                                            mesh=mesh)
+        with mesh:
+            w = export_workload(jitted, *abs_args, name=f"resnet{depth}")
+            measured = measure(jitted, concrete(jax.random.PRNGKey(0)),
+                               runs=3)
+        prog_opt = w.program("optimized")
+        prog_raw = w.program("raw")
+        p_ana = predict(prog_opt, RooflineEstimator(host), host_topo,
+                        slicer="linear", name=f"resnet{depth}")
+        prof = ProfilingEstimator(program=prog_raw, runs=3)
+        p_prof = predict(prog_raw, prof, host_topo, slicer="linear",
+                         name=f"resnet{depth}")
+        prof_total = p_prof.step_time_s + p_ana.comm_s
+        rows.append({
+            "name": f"fig7-host-resnet{depth}",
+            "us_per_call": measured * 1e6,
+            "measured_ms": round(measured * 1e3, 1),
+            "analytical_ms": round(p_ana.step_time_s * 1e3, 1),
+            "profiling_ms": round(prof_total * 1e3, 1),
+            "analytical_mape": round(mape(p_ana.step_time_s, measured), 1),
+            "profiling_mape": round(mape(prof_total, measured), 1),
+            "reference_bracketed":
+                p_ana.step_time_s < measured < prof_total,
+        })
+
+    # full-scale A100 predictions (paper config: 256/device, fp16, 224px)
+    for depth in (18, 34, 50, 101):
+        jitted, abs_args, _ = _build(depth, batch=64, img=224, mesh=mesh)
+        with mesh:
+            w = export_workload(jitted, *abs_args, name=f"resnet{depth}")
+        prog_opt = w.program("optimized")
+        p_ana = predict(prog_opt, RooflineEstimator(A100), a100_topo,
+                        slicer="linear", name=f"resnet{depth}")
+        rows.append({
+            "name": f"fig7-a100-resnet{depth}",
+            "us_per_call": p_ana.step_time_s * 1e6,
+            "analytical_ms": round(p_ana.step_time_s * 1e3, 2),
+            "comm_ms": round(p_ana.comm_s * 1e3, 2),
+            "segments": p_ana.num_segments,
+        })
+    emit(rows, "fig7_resnet")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Microbenchmarks of the framework's own machinery: parser throughput,
+slicers, network scheduler, Pallas kernels (interpret mode), estimators."""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+from benchmarks.common import build_llama_step, emit  # noqa: E402
+
+
+def _time(fn, n=3) -> float:
+    fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.estimators import RooflineEstimator, SystolicEstimator
+    from repro.core.ir import parse, program_cost
+    from repro.core.network import Torus, simulate
+    from repro.core.pipeline import export_workload, predict
+    from repro.core.slicing import dependency_aware_split, linear_split
+    from repro.core.systems import TPU_V5E
+    from repro.launch.mesh import make_mesh
+
+    rows = []
+    mesh = make_mesh((4, 1), ("data", "model"))
+    cfg, jitted, abs_args, _ = build_llama_step(
+        "llama3-100m", seq=512, batch=4, mesh=mesh, train=True)
+    with mesh:
+        w = export_workload(jitted, *abs_args, name="llama3-100m")
+
+    hlo = w.hlo_text
+    t = _time(lambda: parse(hlo))
+    rows.append({"name": "micro-parse-hlo", "us_per_call": t * 1e6,
+                 "chars": len(hlo),
+                 "mb_per_s": round(len(hlo) / t / 1e6, 1)})
+    prog = parse(hlo)
+    t = _time(lambda: program_cost(prog))
+    rows.append({"name": "micro-program-cost", "us_per_call": t * 1e6,
+                 "ops": prog.num_ops})
+    t = _time(lambda: linear_split(prog))
+    rows.append({"name": "micro-linear-split", "us_per_call": t * 1e6,
+                 "segments": len(linear_split(prog))})
+    t = _time(lambda: dependency_aware_split(prog))
+    rows.append({"name": "micro-dep-split", "us_per_call": t * 1e6,
+                 "segments": len(dependency_aware_split(prog)[0])})
+    p = predict(prog, RooflineEstimator(TPU_V5E), Torus(dims=(2, 2)),
+                slicer="dep", name="micro")
+    t = _time(lambda: predict(prog, RooflineEstimator(TPU_V5E),
+                              Torus(dims=(2, 2)), slicer="dep",
+                              name="micro"))
+    rows.append({"name": "micro-predict-e2e", "us_per_call": t * 1e6,
+                 "segments": p.num_segments})
+
+    # kernels (interpret mode on CPU — correctness-path timing only)
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    q = jnp.ones((1, 4, 256, 64), jnp.float32)
+    t = _time(lambda: flash_attention(q, q, q).block_until_ready())
+    rows.append({"name": "micro-flashattn-interp", "us_per_call": t * 1e6,
+                 "shape": "1x4x256x64"})
+    x = jnp.ones((4, 512, 1024), jnp.bfloat16)
+    wgt = jnp.ones((1024,), jnp.bfloat16)
+    t = _time(lambda: rmsnorm(x, wgt).block_until_ready())
+    rows.append({"name": "micro-rmsnorm-interp", "us_per_call": t * 1e6,
+                 "shape": "4x512x1024"})
+
+    # systolic estimator throughput
+    est = SystolicEstimator(TPU_V5E, "cocossim")
+    t = _time(lambda: [est.gemm_latency(2048, 2048, 2048)
+                       for _ in range(100)])
+    rows.append({"name": "micro-systolic-100gemms", "us_per_call": t * 1e6,
+                 "per_gemm_us": round(t / 100 * 1e6, 1)})
+    emit(rows, "micro_bench")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Each figure needs its own XLA host-device count, so every figure runs in a
+fresh subprocess (the device count locks at first jax init).  Output:
+``name,us_per_call,derived`` CSV lines on stdout + one CSV artifact per
+figure under artifacts/bench/.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fig10 micro
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+FIGURES = {
+    "fig6": "fig6_gpu_generations",   # + Table V
+    "fig7": "fig7_resnet",
+    "fig9": "fig9_scaleout",
+    "fig10": "fig10_gemm",
+    "fig11": "fig11_tpu",
+    "caching": "caching_exp",
+    "micro": "micro_bench",
+}
+
+
+def run_figure(key: str) -> int:
+    module = FIGURES[key]
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # each figure sets its own device count
+    print(f"### {key} ({module}) ###", flush=True)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, module + ".py")],
+        cwd=os.path.dirname(HERE), env=env)
+    return proc.returncode
+
+
+def main() -> None:
+    keys = sys.argv[1:] or list(FIGURES)
+    failed = []
+    for key in keys:
+        if key not in FIGURES:
+            print(f"unknown figure {key!r}; have {list(FIGURES)}")
+            failed.append(key)
+            continue
+        if run_figure(key) != 0:
+            failed.append(key)
+    if failed:
+        print(f"FAILED: {failed}")
+        raise SystemExit(1)
+    print("benchmarks: all figures complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Cross-architecture what-if analysis: one exported workload, costed on
+five systems × two estimator fidelities — the heart of the paper.
+
+    PYTHONPATH=src python examples/perf_predict.py [--arch llama3-100m]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import (MixedEstimator, RooflineEstimator,
+                                   SystolicEstimator)
+from repro.core.network import AllToAllNode, Torus
+from repro.core.pipeline import export_workload, predict
+from repro.core.systems import get_system
+from repro.models import get_config, input_specs, model_specs
+from repro.models.params import abstract_params
+from repro.models.transformer import forward
+from repro.configs.base import ShapeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-100m")
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = ShapeConfig("whatif", args.seq, args.batch, "train")
+    params_abs = abstract_params(model_specs(cfg))
+    batch_abs = input_specs(cfg, shape)
+    w = export_workload(jax.jit(lambda p, b: forward(cfg, p, b)),
+                        params_abs, batch_abs, name=args.arch)
+    prog = w.program("optimized")
+
+    print(f"{'system':12s} {'roofline':>12s} {'systolic+roofline':>18s}")
+    for name in ("a100", "h100", "b200", "tpu-v3", "tpu-v5e"):
+        system = get_system(name)
+        topo = Torus(dims=(2, 2)) if "tpu" in name \
+            else AllToAllNode(num_devices=4)
+        ana = predict(prog, RooflineEstimator(system), topo).step_time_s
+        mixed = MixedEstimator(SystolicEstimator(system, "cocossim"),
+                               RooflineEstimator(system))
+        sysl = predict(prog, mixed, topo).step_time_s
+        print(f"{name:12s} {ana*1e3:10.2f}ms {sysl*1e3:16.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving example: greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_smoke_config, model_specs
+from repro.models.params import init_params
+from repro.serve import greedy_decode
+
+
+def main() -> None:
+    cfg = get_smoke_config("mixtral-8x22b")   # MoE decode path
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+    prompt = jnp.array([[5, 17, 42, 7], [9, 3, 3, 1]], jnp.int32)
+    res = greedy_decode(cfg, params, prompt, max_new_tokens=12, max_len=32)
+    print("generated token ids:")
+    for row in res.tokens:
+        print("  ", list(map(int, row)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .base import (MLAConfig, MoEConfig, ModelConfig, RunConfig, SSMConfig,
+                   ShapeConfig, SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                   LONG_500K)
+
+__all__ = ["MLAConfig", "MoEConfig", "ModelConfig", "RunConfig", "SSMConfig",
+           "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+           "LONG_500K"]

@@ -1,0 +1,9 @@
+# The paper's primary contribution: a StableHLO-based cross-architecture,
+# cross-fidelity performance-modeling methodology (HeSPaS).  Subpackages:
+#   ir/         unified workload representation (StableHLO-MLIR + HLO text)
+#   slicing/    linear + dependency-aware compute/comm splitting
+#   estimators/ Compute API: analytical / profiling / systolic backends
+#   network/    topology-aware collective + scheduler simulation
+#   trace/      Chakra-style COMP/COMM trace graphs
+#   systems.py  hardware descriptions (GPUs, TPUs, host)
+#   pipeline.py end-to-end export -> slice -> estimate -> netsim driver

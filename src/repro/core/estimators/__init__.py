@@ -1,0 +1,11 @@
+from .analytical import RooflineEstimator
+from .base import ComputeEstimator, MixedEstimator
+from .cache import CachedEstimator, CacheStats
+from .profiling import ProfilingEstimator
+from .systolic import PRESETS, SystolicEstimator
+
+__all__ = [
+    "ComputeEstimator", "MixedEstimator", "RooflineEstimator",
+    "CachedEstimator", "CacheStats", "ProfilingEstimator",
+    "SystolicEstimator", "PRESETS",
+]

@@ -1,0 +1,58 @@
+"""Analytical roofline estimator (paper §IV-C1).
+
+Per-operator roofline using peak FLOP/s and peak memory bandwidth, selecting
+the dominant bottleneck.  Fused regions are modeled as a single compute
+region: memory traffic is accounted only at the region boundaries while the
+full compute cost of all constituent operators is preserved — this lets
+*optimized* StableHLO inputs be consumed directly and is what makes the
+analytical path consistently optimistic relative to hardware.
+"""
+from __future__ import annotations
+
+from ..ir.opcost import op_cost
+from ..slicing.regions import ComputeRegion
+from ..systems import System
+from .base import ComputeEstimator
+
+
+class RooflineEstimator(ComputeEstimator):
+    toolchain = "roofline"
+
+    def __init__(self, system: System, mode: str = "region",
+                 include_overheads: bool = False):
+        """mode: 'region' (boundary-bytes; optimistic, for optimized IR) or
+        'per-op' (per-operator max(compute, memory) summed; for raw IR)."""
+        super().__init__(system)
+        assert mode in ("region", "per-op")
+        self.mode = mode
+        self.include_overheads = include_overheads
+
+    def _dtype_of(self, region: ComputeRegion) -> str:
+        # dominant dtype by output bytes across matmul-ish ops, else first op
+        best, best_bytes = "bf16", -1.0
+        for op in region.ops:
+            for t in op.result_types:
+                if t.nbytes > best_bytes:
+                    best, best_bytes = t.dtype, t.nbytes
+        return best
+
+    def get_run_time_estimate(self, region: ComputeRegion) -> float:
+        sysm = self.system
+        if self.mode == "region":
+            dtype = self._dtype_of(region)
+            compute_t = region.cost.flops / sysm.flops_for(dtype)
+            mem_bytes = region.boundary_in_bytes + region.boundary_out_bytes
+            memory_t = mem_bytes / sysm.mem_bw
+            t = max(compute_t, memory_t)
+            if self.include_overheads:
+                t += sysm.kernel_overhead_s
+            return t
+        total = 0.0
+        for op in region.ops:
+            c = op_cost(op)
+            dtype = (op.result_types[0].dtype if op.result_types else "bf16")
+            t = max(c.flops / sysm.flops_for(dtype), c.bytes / sysm.mem_bw)
+            if self.include_overheads and (c.flops > 0 or c.bytes > 0):
+                t += sysm.kernel_overhead_s
+            total += t
+        return total

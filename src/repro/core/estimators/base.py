@@ -1,0 +1,68 @@
+"""The Compute API (paper §III-B(c)).
+
+Every estimator implements the same minimal interface so they can be mixed
+within one workload (e.g. systolic for GEMM regions + analytical for the
+rest) while preserving a single point of latency collection:
+
+  * ``get_run_time_estimate(region)`` -> seconds
+  * ``get_compile_args()``  (optional) -> compiler flags/config
+  * ``get_exec_args()``     (optional) -> runtime flags (#runs, ...)
+"""
+from __future__ import annotations
+
+import abc
+
+from ..slicing.regions import ComputeRegion
+from ..systems import System
+
+
+class ComputeEstimator(abc.ABC):
+    """Base class of the Compute API."""
+
+    #: identifies the 'compilation toolchain' C in the (H, C, R) cache key
+    toolchain: str = "none"
+
+    def __init__(self, system: System):
+        self.system = system
+
+    @abc.abstractmethod
+    def get_run_time_estimate(self, region: ComputeRegion) -> float:
+        """Estimated latency of one execution of the region, in seconds."""
+
+    def get_compile_args(self) -> dict:
+        return {}
+
+    def get_exec_args(self) -> dict:
+        return {}
+
+    def supports(self, region: ComputeRegion) -> bool:
+        """Whether this estimator can evaluate the region natively.
+
+        Narrow estimators (e.g. systolic-array simulators that only model
+        matrix multiplication) return False for regions outside their scope;
+        the pipeline then falls back to a paired estimator — the paper's
+        mixed-estimator mechanism.
+        """
+        return True
+
+    @property
+    def cache_hw_key(self) -> str:
+        return self.system.name
+
+
+class MixedEstimator(ComputeEstimator):
+    """Primary estimator + fallback for unsupported regions (paper §III-B(c))."""
+
+    def __init__(self, primary: ComputeEstimator, fallback: ComputeEstimator):
+        super().__init__(primary.system)
+        self.primary = primary
+        self.fallback = fallback
+        self.toolchain = f"{primary.toolchain}+{fallback.toolchain}"
+
+    def get_run_time_estimate(self, region: ComputeRegion) -> float:
+        if self.primary.supports(region):
+            return self.primary.get_run_time_estimate(region)
+        return self.fallback.get_run_time_estimate(region)
+
+    def supports(self, region: ComputeRegion) -> bool:
+        return True

@@ -1,0 +1,146 @@
+"""Profiling estimator (paper §IV-C2).
+
+Each compute region is re-emitted as a standalone StableHLO module,
+compiled with the in-process XLA client for the host platform, and executed
+with synthetic inputs; the measured median runtime is the region latency.
+This mirrors ``hlo_runner_main``-based profiling, including its
+characteristic bias: compilation scope is truncated at region boundaries,
+so cross-region fusion/global optimization is lost — the profiling path is
+systematically pessimistic (paper §V-A).
+
+When the profiled platform differs from the target system, latencies are
+rescaled by the roofline ratio of the two systems for the region's dominant
+resource (a pragmatic cross-platform projection; flagged in results as
+``projected=True``).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from ..ir.graph import Program
+from ..slicing.emit import RegionEmitError, region_to_module
+from ..slicing.regions import ComputeRegion
+from ..systems import System, host_system
+from .analytical import RooflineEstimator
+from .base import ComputeEstimator
+
+_F_DTYPES = {"f16": np.float16, "f32": np.float32, "f64": np.float64}
+_I_DTYPES = {"s8": np.int8, "s16": np.int16, "s32": np.int32,
+             "s64": np.int64, "u8": np.uint8, "u16": np.uint16,
+             "u32": np.uint32, "u64": np.uint64, "i1": np.bool_,
+             "pred": np.bool_}
+
+
+def _synthetic(t) -> np.ndarray:
+    if t.dtype == "bf16":
+        try:
+            import ml_dtypes
+            return np.random.default_rng(0).standard_normal(
+                t.shape, dtype=np.float32).astype(ml_dtypes.bfloat16)
+        except ImportError:
+            return np.random.default_rng(0).standard_normal(
+                t.shape, dtype=np.float32)
+    if t.dtype in _F_DTYPES:
+        return np.random.default_rng(0).standard_normal(t.shape).astype(
+            _F_DTYPES[t.dtype])
+    if t.dtype in _I_DTYPES:
+        if t.dtype in ("i1", "pred"):
+            return np.zeros(t.shape, np.bool_)
+        return np.zeros(t.shape, _I_DTYPES[t.dtype])
+    return np.zeros(t.shape, np.float32)
+
+
+class ProfilingEstimator(ComputeEstimator):
+    toolchain = "xla-host"
+
+    def __init__(self, system: System | None = None, program: Program | None = None,
+                 runs: int = 5, target_system: System | None = None):
+        """``system``: platform actually profiled (defaults to host).
+        ``target_system``: if set, results are roofline-projected onto it.
+        ``program``: the source program (needed for region re-emission)."""
+        super().__init__(system or host_system())
+        self.program = program
+        self.runs = runs
+        self.target_system = target_system
+        self._backend = None
+        self.fallback = RooflineEstimator(self.system, mode="per-op",
+                                          include_overheads=True)
+        self.emit_failures = 0
+
+    # Compute API
+    def get_compile_args(self) -> dict:
+        return {"backend": "cpu", "num_partitions": 1}
+
+    def get_exec_args(self) -> dict:
+        return {"runs": self.runs, "reduction": "median"}
+
+    def _get_backend(self):
+        if self._backend is None:
+            import jax
+            self._backend = jax.devices("cpu")[0].client
+        return self._backend
+
+    def _compile(self, module_text: str):
+        from jax._src import compiler
+        from jax._src.interpreters import mlir as jmlir
+        from jax._src.lib.mlir import ir
+        from jaxlib._jax import DeviceList
+        backend = self._get_backend()
+        with jmlir.make_ir_context():
+            module = ir.Module.parse(module_text)
+        opts = compiler.get_compile_options(num_replicas=1, num_partitions=1)
+        dl = DeviceList(tuple(backend.devices()[:1]))
+        return compiler.backend_compile_and_load(backend, module, dl, opts, [])
+
+    def get_run_time_estimate(self, region: ComputeRegion) -> float:
+        if self.program is None:
+            return self.fallback.get_run_time_estimate(region)
+        try:
+            module_text, in_types = region_to_module(
+                region.ops, self.program, name="profiled_region")
+            exe = self._compile(module_text)
+        except Exception:
+            self.emit_failures += 1
+            return self.fallback.get_run_time_estimate(region)
+        backend = self._get_backend()
+        bufs = [backend.buffer_from_pyval(_synthetic(t)) for t in in_types]
+        try:
+            exe.execute(bufs)  # warmup
+            times = []
+            for _ in range(self.runs):
+                t0 = time.perf_counter()
+                out = exe.execute(bufs)
+                for o in out:
+                    o.block_until_ready()
+                times.append(time.perf_counter() - t0)
+            measured = statistics.median(times)
+        except Exception:
+            self.emit_failures += 1
+            return self.fallback.get_run_time_estimate(region)
+        return self._project(region, measured)
+
+    def _project(self, region: ComputeRegion, host_seconds: float) -> float:
+        """Project a host-measured latency onto the target system."""
+        if self.target_system is None:
+            return host_seconds
+        src, dst = self.system, self.target_system
+        dtype = "f32"
+        for op in region.ops:
+            if op.result_types:
+                dtype = op.result_types[0].dtype
+                break
+        compute_ratio = src.flops_for(dtype) / dst.flops_for(dtype)
+        memory_ratio = src.mem_bw / dst.mem_bw
+        # dominant resource on the *target* decides the scaling
+        c_t = region.cost.flops / dst.flops_for(dtype)
+        m_t = (region.boundary_in_bytes + region.boundary_out_bytes) / dst.mem_bw
+        ratio = compute_ratio if c_t >= m_t else memory_ratio
+        return host_seconds * ratio
+
+    @property
+    def cache_hw_key(self) -> str:
+        tgt = self.target_system.name if self.target_system else "native"
+        return f"{self.system.name}->{tgt}"

@@ -1,0 +1,14 @@
+"""Unified IR front end: StableHLO-MLIR and HLO text -> one op graph."""
+from .collectives import CommSpec, collect_collectives, comm_spec, total_collective_bytes
+from .graph import COLLECTIVE_OPS, OpNode, Program, dependency_edges
+from .opcost import Cost, op_cost, program_cost
+from .parser import parse, parse_hlo, parse_stablehlo
+from .types import DTYPE_BYTES, TensorType
+
+__all__ = [
+    "CommSpec", "collect_collectives", "comm_spec", "total_collective_bytes",
+    "COLLECTIVE_OPS", "OpNode", "Program", "dependency_edges",
+    "Cost", "op_cost", "program_cost",
+    "parse", "parse_hlo", "parse_stablehlo",
+    "DTYPE_BYTES", "TensorType",
+]

@@ -1,0 +1,187 @@
+"""End-to-end evaluation pipeline (paper Fig 2):
+
+    workload export -> optimization -> slicing -> compute estimation
+                    -> trace construction -> network simulation
+
+One :class:`Workload` (a StableHLO/HLO text pair exported from a jitted
+step) can be driven through any combination of slicer × estimator ×
+topology — the cross-fidelity, cross-architecture axis of the paper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from .estimators.base import ComputeEstimator
+from .estimators.cache import CachedEstimator, CacheStats
+from .ir.graph import Program
+from .ir.parser import parse
+from .network.scheduler import ScheduleResult, simulate
+from .network.topology import Topology
+from .slicing.depaware import dependency_aware_split
+from .slicing.linear import linear_split
+from .slicing.regions import Segment
+from .trace.chakra import Trace
+
+
+@dataclass
+class Workload:
+    """An exported workload: raw StableHLO and/or optimized HLO text."""
+    name: str
+    stablehlo_text: str | None = None
+    hlo_text: str | None = None
+    meta: dict = field(default_factory=dict)
+
+    def program(self, fidelity: str = "optimized") -> Program:
+        if fidelity == "optimized" and self.hlo_text:
+            return parse(self.hlo_text)
+        if self.stablehlo_text is None:
+            raise ValueError(f"workload {self.name}: no stablehlo text")
+        return parse(self.stablehlo_text)
+
+
+def export_workload(jitted, *specs, name: str = "workload",
+                    compile_workload: bool = True, **kw) -> Workload:
+    """Export a jitted function's StableHLO + optimized HLO (paper stage a).
+
+    ``jitted`` must be a ``jax.jit`` result; ``specs`` are
+    ShapeDtypeStructs (sharded or not) — no device allocation happens.
+    """
+    lowered = jitted.lower(*specs, **kw)
+    w = Workload(name=name, stablehlo_text=lowered.as_text())
+    if compile_workload:
+        compiled = lowered.compile()
+        w.hlo_text = compiled.as_text()
+        try:
+            w.meta["cost_analysis"] = dict(compiled.cost_analysis() or {})
+        except Exception:
+            pass
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                w.meta["memory_analysis"] = {
+                    "argument_size_in_bytes": ma.argument_size_in_bytes,
+                    "output_size_in_bytes": ma.output_size_in_bytes,
+                    "temp_size_in_bytes": ma.temp_size_in_bytes,
+                    "generated_code_size_in_bytes": ma.generated_code_size_in_bytes,
+                }
+        except Exception:
+            pass
+    return w
+
+
+@dataclass
+class Prediction:
+    workload: str
+    system: str
+    estimator: str
+    slicer: str
+    step_time_s: float
+    compute_s: float
+    comm_s: float
+    exposed_comm_s: float
+    num_segments: int
+    num_comm: int
+    simulation_wall_s: float
+    cache_stats: CacheStats | None = None
+    schedule: ScheduleResult | None = None
+    breakdown: dict = field(default_factory=dict)
+
+
+def _trace_from_linear(segments: list[Segment], durations: list[float],
+                       name: str) -> Trace:
+    """Sequential trace; loop groups are unrolled preserving group order."""
+    trace = Trace(meta={"workload": name, "slicer": "linear"})
+    prev: int | None = None
+
+    def emit(seg: Segment, dur: float) -> None:
+        nonlocal prev
+        deps = [prev] if prev is not None else []
+        if seg.kind == "COMM":
+            nid = trace.add_comm(
+                seg.comm.kind, seg.comm.algo_bytes, seg.comm.group_size,
+                seg.comm.num_groups, deps=deps, name=seg.comm.label)
+        else:
+            nid = trace.add_comp(
+                seg.region.label or "region", dur * 1e6, deps=deps,
+                flops=seg.region.cost.flops)
+        prev = nid
+
+    i = 0
+    while i < len(segments):
+        seg = segments[i]
+        if seg.repeat <= 1:
+            emit(seg, durations[i])
+            i += 1
+            continue
+        # contiguous run with the same group repeats together, in order
+        j = i
+        while (j < len(segments) and segments[j].group == seg.group
+               and segments[j].repeat == seg.repeat):
+            j += 1
+        for _ in range(seg.repeat):
+            for k in range(i, j):
+                emit(segments[k], durations[k])
+        i = j
+    return trace
+
+
+def _trace_from_dep(segments: list[Segment], deps: dict[int, set[int]],
+                    durations: list[float], name: str) -> Trace:
+    trace = Trace(meta={"workload": name, "slicer": "dependency-aware"})
+    for idx, seg in enumerate(segments):
+        d = sorted(deps.get(idx, set()))
+        if seg.kind == "COMM":
+            trace.add_comm(seg.comm.kind, seg.comm.algo_bytes,
+                           seg.comm.group_size, seg.comm.num_groups,
+                           deps=d, name=seg.comm.label)
+        else:
+            trace.add_comp(seg.region.label or "region",
+                           durations[idx] * 1e6, deps=d,
+                           flops=seg.region.cost.flops)
+    return trace
+
+
+def predict(program: Program, estimator: ComputeEstimator, topology: Topology,
+            *, slicer: str = "linear", overlap: bool = False,
+            straggler_factor: float = 1.0, compression: float = 1.0,
+            name: str = "workload", use_cache: bool = True,
+            system_name: str | None = None) -> Prediction:
+    """Run stages (b)-(d) of the methodology on a parsed program."""
+    t0 = time.perf_counter()
+    cached = CachedEstimator(estimator) if use_cache else None
+    est = cached or estimator
+
+    if slicer == "linear":
+        segments = linear_split(program)
+        durations = [est.get_run_time_estimate(s.region)
+                     if s.kind == "COMP" else 0.0 for s in segments]
+        trace = _trace_from_linear(segments, durations, name)
+    elif slicer in ("dep", "dependency-aware"):
+        segments, dep_map = dependency_aware_split(program)
+        durations = [est.get_run_time_estimate(s.region)
+                     if s.kind == "COMP" else 0.0 for s in segments]
+        trace = _trace_from_dep(segments, dep_map, durations, name)
+    else:
+        raise ValueError(f"unknown slicer {slicer!r}")
+
+    trace.validate()
+    sched = simulate(trace, topology, overlap=overlap,
+                     straggler_factor=straggler_factor,
+                     compression=compression)
+    wall = time.perf_counter() - t0
+    return Prediction(
+        workload=name,
+        system=system_name or estimator.system.name,
+        estimator=estimator.toolchain,
+        slicer=slicer,
+        step_time_s=sched.makespan_s,
+        compute_s=sched.compute_busy_s,
+        comm_s=sched.comm_busy_s,
+        exposed_comm_s=sched.exposed_comm_s,
+        num_segments=len(segments),
+        num_comm=sum(1 for s in segments if s.kind == "COMM"),
+        simulation_wall_s=wall,
+        cache_stats=cached.stats if cached else None,
+        schedule=sched,
+        breakdown=sched.breakdown)

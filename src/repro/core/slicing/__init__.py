@@ -1,0 +1,9 @@
+from .regions import ComputeRegion, Segment, region_fingerprint
+from .linear import linear_split
+from .depaware import dependency_aware_split
+from .emit import region_to_module
+
+__all__ = [
+    "ComputeRegion", "Segment", "region_fingerprint",
+    "linear_split", "dependency_aware_split", "region_to_module",
+]

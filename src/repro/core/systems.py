@@ -1,0 +1,179 @@
+"""Hardware system descriptions (paper Table IV + Fig 5, extended).
+
+Every estimator and the network simulator read from these records, so a
+workload can be re-costed on a different system by swapping one object —
+the paper's cross-architecture axis.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class Interconnect:
+    kind: str                 # "all_to_all" | "dragonfly" | "torus2d" | "torus3d" | "host"
+    link_bw: float            # bytes/s per link per direction
+    link_latency: float = 1e-6
+    links_per_device: int = 1
+    params: dict = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class System:
+    name: str
+    peak_flops: dict          # dtype -> FLOP/s (dense)
+    mem_bw: float             # bytes/s HBM
+    mem_capacity: float       # bytes
+    interconnect: Interconnect
+    # systolic-array geometry (TPU-class; GPUs get tensor-core-equivalent)
+    mxu_rows: int = 128
+    mxu_cols: int = 128
+    n_mxu: int = 2
+    clock_hz: float = 940e6
+    vmem_bytes: float = 128 * 2**20
+    # fixed per-kernel launch/dispatch overhead observed on the platform
+    kernel_overhead_s: float = 2e-6
+
+    def flops_for(self, dtype: str) -> float:
+        if dtype in self.peak_flops:
+            return self.peak_flops[dtype]
+        if dtype in ("f16", "bf16"):
+            return self.peak_flops.get("bf16", self.peak_flops.get(
+                "f16", self.peak_flops["f32"]))
+        return self.peak_flops.get("f32", max(self.peak_flops.values()))
+
+
+_T = 1e12
+_G = 1e9
+
+# ---- paper Table IV: GPU systems (4-GPU all-to-all NVLink nodes) ----
+A100 = System(
+    name="A100-40GB-SXM",
+    peak_flops={"bf16": 312 * _T, "f16": 312 * _T, "f32": 19.5 * _T},
+    mem_bw=1.94e12, mem_capacity=40 * _G,
+    interconnect=Interconnect("all_to_all", link_bw=100 * _G),
+    mxu_rows=16, mxu_cols=16, n_mxu=432, clock_hz=1.41e9,
+    vmem_bytes=40 * 2**20, kernel_overhead_s=4e-6,
+)
+H100 = System(
+    name="H100-80GB-SXM",
+    peak_flops={"bf16": 1979 * _T / 2, "f16": 1979 * _T / 2,
+                "f32": 67 * _T, "f8e4m3fn": 1979 * _T},
+    mem_bw=3.35e12, mem_capacity=80 * _G,
+    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
+    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
+    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
+)
+# The paper's Table IV lists the sparse/marketing 1979 TFLOP/s for H100/H200;
+# we keep a separate "paper-faithful" variant used when reproducing its plots.
+H100_PAPER = replace(H100, name="H100-paper",
+                     peak_flops={"bf16": 1979 * _T, "f16": 1979 * _T,
+                                 "f32": 67 * _T})
+H200 = System(
+    name="H200-141GB-SXM",
+    peak_flops={"bf16": 1979 * _T / 2, "f16": 1979 * _T / 2, "f32": 67 * _T},
+    mem_bw=4.8e12, mem_capacity=141 * _G,
+    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
+    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
+    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
+)
+H200_PAPER = replace(H200, name="H200-paper",
+                     peak_flops={"bf16": 1979 * _T, "f16": 1979 * _T,
+                                 "f32": 67 * _T})
+B200 = System(
+    name="B200-180GB-HGX",
+    peak_flops={"bf16": 2250 * _T, "f16": 2250 * _T, "f32": 80 * _T},
+    mem_bw=7.7e12, mem_capacity=180 * _G,
+    interconnect=Interconnect("all_to_all", link_bw=300 * _G),
+    mxu_rows=16, mxu_cols=16, n_mxu=592, clock_hz=1.9e9,
+    vmem_bytes=60 * 2**20, kernel_overhead_s=3e-6,
+)
+B200_PAPER = replace(B200, name="B200-paper",
+                     peak_flops={"bf16": 4500 * _T, "f16": 4500 * _T,
+                                 "f32": 80 * _T})
+GH200 = System(  # paper §V-B scale-out node GPU
+    name="GH200",
+    peak_flops={"bf16": 990 * _T, "f16": 990 * _T, "f32": 67 * _T},
+    mem_bw=4.9e12, mem_capacity=96 * _G,
+    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
+    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
+    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
+)
+
+# ---- TPUs ----
+TPU_V3_CORE = System(  # paper Fig 5 (per-core, from xprof)
+    name="TPUv3-core",
+    peak_flops={"bf16": 61.4 * _T, "f32": 15.4 * _T},
+    mem_bw=450e9, mem_capacity=16 * _G,
+    interconnect=Interconnect("torus2d", link_bw=70 * _G,
+                              links_per_device=4,
+                              params={"dims": (4, 2)}),
+    mxu_rows=128, mxu_cols=128, n_mxu=2, clock_hz=940e6,
+    vmem_bytes=16 * 2**20, kernel_overhead_s=2e-6,
+)
+# Roofline-target chip for this repo's dry-run mesh (constants mandated by
+# the deliverable: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+TPU_V5E = System(
+    name="TPUv5e",
+    peak_flops={"bf16": 197 * _T, "f32": 49 * _T, "s8": 394 * _T},
+    mem_bw=819e9, mem_capacity=16 * _G,
+    interconnect=Interconnect("torus2d", link_bw=50 * _G,
+                              links_per_device=4,
+                              params={"dims": (16, 16)}),
+    mxu_rows=128, mxu_cols=128, n_mxu=4, clock_hz=1.74e9,
+    vmem_bytes=128 * 2**20, kernel_overhead_s=1e-6,
+)
+
+# ---- host CPU (ground-truth platform for profiling validation) ----
+_HOST_CACHE: dict[str, float] = {}
+
+
+def _measure_host_matmul_flops() -> float:
+    """Calibrate host peak FLOP/s with a jitted bf16 GEMM burst.
+
+    bf16 is what our workloads run in; on CPU it is emulated, so an f32
+    numpy calibration would overstate the achievable rate ~4×."""
+    import jax
+    import jax.numpy as jnp
+    n = 512
+    a = jnp.ones((n, n), jnp.bfloat16)
+    b = jnp.ones((n, n), jnp.bfloat16)
+    f = jax.jit(lambda x, y: x @ y)
+    f(a, b).block_until_ready()  # compile + warmup
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        f(a, b).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return 2 * n**3 / best
+
+
+def host_system(calibrate: bool = True) -> System:
+    """The container's CPU, as a System (used as profiling ground truth)."""
+    if "flops" not in _HOST_CACHE:
+        _HOST_CACHE["flops"] = (
+            _measure_host_matmul_flops() if calibrate else 50e9)
+    f = _HOST_CACHE["flops"]
+    return System(
+        name="host-cpu",
+        peak_flops={"f32": f, "bf16": f, "f16": f, "f64": f / 2},
+        mem_bw=20e9, mem_capacity=16 * _G,
+        interconnect=Interconnect("host", link_bw=10e9),
+        mxu_rows=8, mxu_cols=8, n_mxu=1, clock_hz=3e9,
+        vmem_bytes=32 * 2**20, kernel_overhead_s=5e-6,
+    )
+
+
+SYSTEMS = {
+    "a100": A100, "h100": H100, "h200": H200, "b200": B200, "gh200": GH200,
+    "h100-paper": H100_PAPER, "h200-paper": H200_PAPER,
+    "b200-paper": B200_PAPER,
+    "tpu-v3": TPU_V3_CORE, "tpu-v5e": TPU_V5E,
+}
+
+
+def get_system(name: str) -> System:
+    if name == "host":
+        return host_system()
+    return SYSTEMS[name.lower()]

@@ -1,0 +1,7 @@
+from .sharding import (ACT_RULES, ACT_RULES_SEQ_SHARDED, PARAM_RULES,
+                       ShardingRules, act_sharding, constrain,
+                       logical_to_spec, param_sharding)
+
+__all__ = ["ACT_RULES", "ACT_RULES_SEQ_SHARDED", "PARAM_RULES",
+           "ShardingRules", "act_sharding", "constrain", "logical_to_spec",
+           "param_sharding"]

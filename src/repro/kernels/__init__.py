@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the framework's compute hot spots.
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# public wrapper, interpret=True off-TPU), ref.py (pure-jnp oracle).

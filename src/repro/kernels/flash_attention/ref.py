@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  logit_cap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, H, Skv, D] -> [B, H, Sq, D]."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if logit_cap > 0:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    q_idx = jnp.arange(sq) + q_offset
+    k_idx = jnp.arange(skv)
+    diff = q_idx[:, None] - k_idx[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

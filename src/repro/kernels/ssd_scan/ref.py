@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel: sequential recurrence.
+
+y_t = C_t · h_t,   h_t = exp(dt_t · a) · h_{t-1} + dt_t · (B_t ⊗ x_t)
+
+This is the exact (linear-time, sequential) SSM semantics; the chunked
+dual form and the Pallas kernel must match it."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+            c_in: jax.Array, initial_state: jax.Array | None = None):
+    """x: [B,S,H,P], dt: [B,S,H], a: [H], b_in/c_in: [B,S,G,N].
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    hpg = h // g
+    f32 = jnp.float32
+    bh = jnp.repeat(b_in, hpg, axis=2).astype(f32)    # [B,S,H,N]
+    ch = jnp.repeat(c_in, hpg, axis=2).astype(f32)
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    af = a.astype(f32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs                      # [B,H,P],[B,H],[B,H,N]
+        decay = jnp.exp(dtt * af[None, :])            # [B,H]
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", bt, xt * dtt[:, :, None])
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = (jnp.zeros((bsz, h, p, n), f32) if initial_state is None
+            else initial_state.astype(f32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), final

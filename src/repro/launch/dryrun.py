@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jax.jit(step, in_shardings=..).lower(**input_specs(arch)).compile()
+must succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh.
+The compiled artifact yields memory_analysis() (fits?), cost_analysis()
+(FLOPs/bytes), and — through the paper's own HeSPaS pipeline — the parsed
+collective schedule and the three roofline terms vs TPU v5e.
+
+Artifacts: one JSON per cell under --out (default artifacts/dryrun/).
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-370m --shape train_4k
+  python -m repro.launch.dryrun --all                 # every cell
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def _opt_state_abstract(specs, opt_name, mesh, rules):
+    """ShapeDtypeStructs (sharded) for the optimizer state, from ParamSpecs.
+
+    Moments inherit the parameter sharding (fully sharded optimizer);
+    adafactor's factored moments drop the corresponding axes."""
+    from repro.distributed.sharding import param_sharding
+    from repro.models.params import ParamSpec, is_spec
+
+    def like(spec: ParamSpec, dtype="float32"):
+        return jax.ShapeDtypeStruct(
+            spec.shape, jnp.dtype(dtype),
+            sharding=param_sharding(spec.axes, mesh, rules, spec.shape))
+
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    if opt_name == "adamw":
+        return {
+            "step": step,
+            "m": jax.tree.map(like, specs, is_leaf=is_spec),
+            "v": jax.tree.map(like, specs, is_leaf=is_spec),
+        }
+    # adafactor
+    def fac(spec: ParamSpec):
+        if len(spec.shape) >= 2 and spec.shape[-1] >= 128 \
+                and spec.shape[-2] >= 128:
+            vr = ParamSpec(spec.shape[:-1], spec.axes[:-1], dtype="float32")
+            vc = ParamSpec((*spec.shape[:-2], spec.shape[-1]),
+                           (*spec.axes[:-2], spec.axes[-1]),
+                           dtype="float32")
+            return {"vr": like(vr), "vc": like(vc)}
+        return {"v": like(spec)}
+
+    return {"step": step,
+            "v": jax.tree.map(fac, specs, is_leaf=is_spec)}
+
+
+def build_step(arch: str, shape_name: str, mesh, *, opt_name: str,
+               cfg_overrides: dict | None = None,
+               rule_overrides: dict | None = None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    from repro.configs.base import SHAPES
+    from repro.distributed.sharding import (ACT_RULES_SEQ_SHARDED,
+                                            ShardingRules)
+    from repro.models import (cache_specs_abstract, get_config, input_specs,
+                              model_specs)
+    from repro.models.params import abstract_params
+    from repro.models.transformer import decode_step, forward, prefill
+    from repro.serve.decode import make_serve_step
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import OptimizerConfig
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    seq_sharded = (shape.name == "long_500k")
+    rules = ShardingRules()
+    if seq_sharded:
+        rules = ShardingRules(rules.param_rules, dict(ACT_RULES_SEQ_SHARDED))
+    if rule_overrides:
+        rules = rules.with_overrides(**rule_overrides)
+
+    specs = model_specs(cfg)
+    params_abs = abstract_params(specs, mesh, rules)
+    batch_abs = input_specs(cfg, shape, mesh, rules,
+                            seq_sharded=seq_sharded)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(name=opt_name)
+        opt_abs = _opt_state_abstract(specs, opt_name, mesh, rules)
+        step = make_train_step(cfg, opt_cfg)
+        return jax.jit(step, donate_argnums=(0, 1)), \
+            (params_abs, opt_abs, batch_abs), cfg
+    if shape.kind == "prefill":
+        fn = lambda p, b: prefill(cfg, p, b)
+        return jax.jit(fn), (params_abs, batch_abs), cfg
+    # decode
+    cache_abs = cache_specs_abstract(cfg, shape, mesh, rules,
+                                     seq_sharded=seq_sharded)
+    serve = make_serve_step(cfg)
+    return jax.jit(serve, donate_argnums=(1,)), \
+        (params_abs, cache_abs, batch_abs), cfg
+
+
+def roofline_terms(parsed_cost, collective_bytes_per_chip: float,
+                   system) -> dict:
+    """The three roofline terms (seconds) on the target system."""
+    compute_t = parsed_cost["flops"] / system.flops_for("bf16")
+    memory_t = parsed_cost["bytes"] / system.mem_bw
+    # axis-aligned torus collectives stripe over both ring directions
+    eff_link_bw = system.interconnect.link_bw * 2
+    collective_t = collective_bytes_per_chip / eff_link_bw
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, cfg_overrides: dict | None = None,
+             rule_overrides: dict | None = None, tag: str = "") -> dict:
+    from repro.core.ir import parse_hlo, program_cost, total_collective_bytes
+    from repro.core.systems import TPU_V5E
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import get_config, skip_reason
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_name)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "skip" if reason else "pending", "skip_reason": reason,
+    }
+    if reason:
+        _write(out_path, record)
+        return record
+
+    opt_name = "adafactor" if arch == "deepseek-v3-671b" else "adamw"
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            jitted, args, cfg = build_step(arch, shape_name, mesh,
+                                           opt_name=opt_name,
+                                           cfg_overrides=cfg_overrides,
+                                           rule_overrides=rule_overrides)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            mem = {}
+            if ma is not None:
+                mem = {k: int(getattr(ma, k)) for k in
+                       ("argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "alias_size_in_bytes",
+                        "generated_code_size_in_bytes")}
+            print(f"[{cell_id}] memory_analysis:", mem, flush=True)
+            ca = {}
+            try:
+                ca = {k: float(v) for k, v in
+                      (compiled.cost_analysis() or {}).items()
+                      if isinstance(v, (int, float))}
+            except Exception:
+                pass
+            print(f"[{cell_id}] cost_analysis flops={ca.get('flops')}",
+                  flush=True)
+
+            # --- the paper's methodology, applied to our own dry-run ---
+            hlo_text = compiled.as_text()
+            prog = parse_hlo(hlo_text)
+            pc = program_cost(prog)
+            coll = total_collective_bytes(prog)
+            parsed = {"flops": pc.flops, "bytes": pc.bytes,
+                      "transcendentals": pc.transcendentals}
+            top_bytes = sorted(pc.bytes_by_op.items(),
+                               key=lambda kv: -kv[1])[:12]
+            top_flops = sorted(pc.by_op.items(),
+                               key=lambda kv: -kv[1])[:8]
+            terms = roofline_terms(parsed, sum(coll.values()), TPU_V5E)
+
+            n, active = cfg.param_count()
+            tokens = _tokens_per_step(shape_name)
+            chips = 512 if multi_pod else 256
+            model_flops = 6.0 * active * tokens if shape_name == "train_4k" \
+                else 2.0 * active * tokens
+            record.update({
+                "status": "ok",
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory_analysis": mem,
+                "cost_analysis": {k: ca[k] for k in
+                                  ("flops", "bytes accessed")
+                                  if k in ca},
+                "parsed_per_chip": parsed,
+                "collective_bytes_per_chip": coll,
+                "roofline": terms,
+                "params_total": n, "params_active": active,
+                "model_flops_global": model_flops,
+                "model_flops_per_chip": model_flops / chips,
+                "useful_flops_ratio": (model_flops / chips)
+                / max(pc.flops, 1.0),
+                "hlo_bytes_text": len(hlo_text),
+                "num_collective_sites": len(prog.collectives()),
+                "top_bytes_by_op": dict(top_bytes),
+                "top_flops_by_op": dict(top_flops),
+            })
+    except Exception as e:  # noqa: BLE001 — failures are cell results
+        record.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    record["wall_s"] = round(time.time() - t0, 2)
+    _write(out_path, record)
+    status = record["status"]
+    print(f"[{cell_id}] {status} wall={record['wall_s']}s", flush=True)
+    return record
+
+
+def _tokens_per_step(shape_name: str) -> float:
+    from repro.configs.base import SHAPES
+    s = SHAPES[shape_name]
+    if s.kind == "decode":
+        return float(s.global_batch)          # one token per sequence
+    return float(s.global_batch * s.seq_len)
+
+
+def _write(path: str, record: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    from repro.configs.base import SHAPES
+    from repro.models import ARCH_IDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for A/B runs")
+    ap.add_argument("--cfg-override", action="append", default=[],
+                    help="k=v model-config override (v is literal_eval'd)")
+    args = ap.parse_args()
+    import ast
+    cfg_overrides = {}
+    for kv in args.cfg_override:
+        k, v = kv.split("=", 1)
+        try:
+            cfg_overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            cfg_overrides[k] = v
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    results = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prior = json.load(f)
+                    if prior.get("status") in ("ok", "skip"):
+                        results.append(prior)
+                        continue
+                results.append(run_cell(
+                    arch, shape, multi_pod=multi_pod, out_dir=args.out,
+                    cfg_overrides=cfg_overrides or None, tag=args.tag))
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    fail = [r for r in results if r["status"] == "fail"]
+    print(f"\n=== dry-run summary: {ok} ok, {skip} skip, "
+          f"{len(fail)} fail / {len(results)} cells ===")
+    for r in fail:
+        print(f"  FAIL {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun), emits a
+markdown table per mesh with the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line "what would move the
+dominant term" note; also ranks cells for hillclimb selection.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute_s", "train"): "raise MXU occupancy: bigger per-chip batch or "
+                            "less remat recompute",
+    ("compute_s", "prefill"): "attention flops dominate: tighter flash "
+                              "blocks / fewer padded heads",
+    ("compute_s", "decode"): "batch more sequences per chip",
+    ("memory_s", "train"): "cut HBM traffic: fuse optimizer update, drop "
+                           "f32 master copies, rematerialize less",
+    ("memory_s", "prefill"): "KV-cache writes + activations: fuse layout "
+                             "changes, bf16 cache",
+    ("memory_s", "decode"): "weight streaming bound: quantize weights or "
+                            "batch more requests per chip",
+    ("collective_s", "train"): "shrink gradient all-reduce: reduce-scatter "
+                               "+ int8 compression, or overlap with bwd",
+    ("collective_s", "prefill"): "TP all-gathers dominate: shard activations "
+                                 "on seq instead, or 2D-shard projections",
+    ("collective_s", "decode"): "per-token TP collectives: batch tokens or "
+                                "switch to data-parallel decode",
+}
+
+
+def load(dir_: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs: list[dict], mesh: str) -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh]
+    out = [f"### Mesh {mesh}\n",
+           "| arch | shape | compute | memory | collective | dominant | "
+           "useful/HLO flops | bytes/chip fit (16G) | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | "
+                       f"— | — | {r['skip_reason']} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | "
+                       f"{r.get('error','')[:60]} |")
+            continue
+        t = r["roofline"]
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if r["shape"].startswith("prefill") else "decode")
+        note = NOTES.get((t["dominant"], kind), "")
+        mem = r.get("memory_analysis", {})
+        per_chip = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+        fit = "yes" if per_chip <= 16e9 else f"NO ({per_chip/1e9:.0f}G)"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {fit} | {note} |")
+    return "\n".join(out)
+
+
+def rank_for_hillclimb(recs: list[dict]) -> list[dict]:
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (largest region count = richest slicing)."""
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r["mesh"] == "16x16"]
+    ranked = []
+    for r in ok:
+        t = r["roofline"]
+        total = t["compute_s"] + 1e-30
+        ranked.append({
+            "cell": f"{r['arch']}×{r['shape']}",
+            "useful_ratio": r["useful_flops_ratio"],
+            "collective_frac": t["collective_s"]
+            / (t["compute_s"] + t["memory_s"] + t["collective_s"]),
+            "dominant": t["dominant"],
+            "bound_s": t["bound_s"],
+        })
+    worst = sorted(ranked, key=lambda x: x["useful_ratio"])[:5]
+    coll = sorted(ranked, key=lambda x: -x["collective_frac"])[:5]
+    return {"worst_useful_ratio": worst, "most_collective_bound": coll}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--rank", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(table(recs, "16x16"))
+    print()
+    print(table(recs, "2x16x16"))
+    if args.rank:
+        print()
+        print(json.dumps(rank_for_hillclimb(recs), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .registry import (ARCH_IDS, EXTRA_IDS, cache_specs_abstract, get_config,
+                       get_smoke_config, input_specs, shape_cells, skip_reason)
+from .transformer import (cross_entropy, decode_step, forward,
+                          init_cache_specs, model_specs, prefill)
+
+__all__ = [
+    "ARCH_IDS", "EXTRA_IDS", "cache_specs_abstract", "get_config",
+    "get_smoke_config", "input_specs", "shape_cells", "skip_reason",
+    "cross_entropy", "decode_step", "forward", "init_cache_specs",
+    "model_specs", "prefill",
+]

@@ -1,0 +1,98 @@
+"""Parameter specification trees.
+
+Models declare parameters as ParamSpec pytrees (shape + dtype + logical
+axes + initializer).  The same tree serves three purposes:
+
+  * dry-run: ShapeDtypeStructs with NamedShardings (no allocation);
+  * training: materialized, sharded initialization;
+  * checkpointing: stable flattened names.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | ssm_a
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(tree, prefix: str = "") -> dict[str, ParamSpec]:
+    out: dict[str, ParamSpec] = {}
+    if is_spec(tree):
+        out[prefix.rstrip("/")] = tree
+        return out
+    for k, v in tree.items():
+        out.update(tree_paths(v, f"{prefix}{k}/"))
+    return out
+
+
+def abstract_params(tree, mesh=None, rules=None):
+    """ShapeDtypeStruct pytree (optionally sharded) — for .lower()."""
+    from ..distributed.sharding import param_sharding
+
+    def one(s: ParamSpec):
+        if mesh is not None:
+            return jax.ShapeDtypeStruct(
+                s.shape, jnp.dtype(s.dtype),
+                sharding=param_sharding(s.axes, mesh, rules, s.shape))
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype))
+
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def init_params(tree, key):
+    """Materialize parameters (host-side; used by smoke tests/examples)."""
+    flat = tree_paths(tree)
+    keys = jax.random.split(key, max(len(flat), 1))
+    values: dict[str, jax.Array] = {}
+    for (name, s), k in zip(sorted(flat.items()), keys):
+        dtype = jnp.dtype(s.dtype)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dtype)
+        elif s.init == "ssm_a":   # Mamba A_log init: log(uniform[1,16])
+            v = jnp.log(jnp.linspace(1.0, 16.0, num=int(np.prod(s.shape)))
+                        ).reshape(s.shape).astype(dtype)
+        elif s.init == "scaled":  # fan-in scaled normal
+            fan_in = s.shape[0] if s.shape else 1
+            v = (jax.random.normal(k, s.shape) / math.sqrt(max(fan_in, 1))
+                 ).astype(dtype)
+        else:
+            v = (jax.random.normal(k, s.shape) * s.scale).astype(dtype)
+        values[name] = v
+
+    def rebuild(subtree, prefix=""):
+        if is_spec(subtree):
+            return values[prefix.rstrip("/")]
+        return {k: rebuild(v, f"{prefix}{k}/") for k, v in subtree.items()}
+
+    return rebuild(tree)
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for s in tree_paths(tree).values():
+        total += int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in tree_paths(tree).values())

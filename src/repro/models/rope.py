@@ -1,0 +1,49 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: tuple[int, ...], theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, D]; positions3: [3, B, S] (temporal, height, width ids —
+    equal to the text position for pure-text tokens).  The D/2 frequency
+    channels are partitioned into ``sections`` (t, h, w); each section's
+    angle uses the corresponding position stream.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                    # [D/2]
+    # angles per stream: [3, B, S, D/2]
+    angles = positions3.astype(jnp.float32)[..., None] * freqs
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(angles[i, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                     # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

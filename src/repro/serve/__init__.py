@@ -1,0 +1,3 @@
+from .decode import ServeResult, greedy_decode, make_serve_step
+
+__all__ = ["ServeResult", "greedy_decode", "make_serve_step"]

@@ -1,0 +1,46 @@
+"""Batched autoregressive serving loop built on decode_step."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.params import init_params
+from ..models.transformer import decode_step, init_cache_specs
+
+
+@dataclass
+class ServeResult:
+    tokens: jax.Array            # [B, steps]
+    steps: int
+
+
+def make_serve_step(cfg: ModelConfig):
+    """jit-able serve_step(params, cache, tokens[B,1]) -> (next, cache)."""
+
+    def serve_step(params, cache, batch):
+        logits, cache = decode_step(cfg, params, cache, batch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def greedy_decode(cfg: ModelConfig, params, prompt: jax.Array,
+                  max_new_tokens: int = 8, max_len: int = 128) -> ServeResult:
+    """Greedy generation: prompt [B, S0] -> [B, max_new_tokens]."""
+    b, s0 = prompt.shape
+    cache = init_params(init_cache_specs(cfg, b, max_len),
+                        jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_serve_step(cfg))
+    # feed the prompt token-by-token (prefill-by-decode; simple and exact)
+    tok = None
+    for i in range(s0):
+        tok, cache = step_fn(params, cache, {"tokens": prompt[:, i:i + 1]})
+    out = []
+    for _ in range(max_new_tokens):
+        out.append(tok)
+        tok, cache = step_fn(params, cache, {"tokens": tok[:, None]})
+    return ServeResult(tokens=jnp.stack(out, axis=1), steps=max_new_tokens)

@@ -1,0 +1,13 @@
+from .checkpoint import CheckpointManager
+from .data import DataConfig, ShardedLoader, SyntheticSource
+from .fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                              StragglerDetector, plan_remesh,
+                              recommended_interval)
+from .loop import TrainResult, make_train_step, train
+from .optimizer import OptimizerConfig, make_optimizer
+
+__all__ = ["CheckpointManager", "DataConfig", "ShardedLoader",
+           "SyntheticSource", "ElasticPlan", "HeartbeatMonitor",
+           "StragglerDetector", "plan_remesh", "recommended_interval",
+           "TrainResult", "make_train_step", "train", "OptimizerConfig",
+           "make_optimizer"]

@@ -1,0 +1,192 @@
+"""Training loop: jitted pjit train_step + fault-tolerant outer loop."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..distributed.sharding import ShardingRules, act_sharding, param_sharding
+from ..models.params import abstract_params, init_params
+from ..models.transformer import forward, model_specs
+from .checkpoint import CheckpointManager
+from .data import DataConfig, ShardedLoader, SyntheticSource
+from .fault_tolerance import StragglerDetector
+from .optimizer import OptimizerConfig, make_optimizer
+
+
+def quantize_int8(g: jax.Array):
+    """Symmetric per-tensor int8 quantization (gradient compression)."""
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    *, microbatch: int = 0,
+                    gradient_compression: bool = False):
+    """Builds the pure train_step(params, opt_state, batch) function."""
+    _, update_fn = make_optimizer(opt_cfg)
+
+    def loss_fn(params, batch):
+        loss, _ = forward(cfg, params, batch)
+        return loss
+
+    def compute_grads(params, batch):
+        if microbatch and microbatch > 1:
+            # gradient accumulation over microbatches via scan
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(a.dtype), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), micro)
+            inv = 1.0 / microbatch
+            return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if gradient_compression:
+            # int8 round-trip: models quantized gradient exchange (the
+            # network simulator scales the all-reduce payload to match)
+            def rt(g):
+                q, s = quantize_int8(g)
+                return dequantize_int8(q, s, g.dtype)
+            grads = jax.tree.map(rt, grads)
+        new_params, new_opt, metrics = update_fn(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    steps: int
+    final_loss: float
+    losses: list
+    step_times: list
+    restarts: int = 0
+
+
+def train(run: RunConfig, *, mesh=None, num_steps: int = 20,
+          checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+          resume: bool = False, log_every: int = 10,
+          rules: ShardingRules | None = None,
+          inject_failure_at: int | None = None) -> TrainResult:
+    """End-to-end training with checkpoint/restart and straggler tracking.
+
+    ``inject_failure_at``: raise a simulated node failure at that step —
+    the loop restores from the last committed checkpoint and continues
+    (tested in tests/test_fault_tolerance.py)."""
+    cfg = run.model
+    opt_cfg = OptimizerConfig(
+        name=run.optimizer, learning_rate=run.learning_rate,
+        weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+    init_fn, _ = make_optimizer(opt_cfg)
+    rules = rules or ShardingRules()
+
+    specs = model_specs(cfg)
+    key = jax.random.PRNGKey(run.seed)
+    params = init_params(specs, key)
+    if mesh is not None:
+        from .data import ShardedLoader  # placement path
+        from ..models.params import tree_paths, is_spec
+
+        def place(subtree, spec):
+            return jax.device_put(
+                subtree, param_sharding(spec.axes, mesh, rules))
+        params = jax.tree.map(place, params, specs,
+                              is_leaf=lambda x: hasattr(x, "shape")
+                              and not isinstance(x, dict))
+    opt_state = init_fn(params, opt_cfg)
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=run.shape.seq_len,
+        global_batch=run.shape.global_batch, seed=run.seed,
+        frontend=cfg.frontend, d_model=cfg.d_model)
+    source = SyntheticSource(data_cfg)
+    loader = ShardedLoader(source, mesh, rules) if mesh is not None \
+        else source
+
+    ckpt = CheckpointManager(checkpoint_dir) if checkpoint_dir else None
+    start_step = 0
+    restarts = 0
+    if ckpt and resume:
+        state, data_state, step = ckpt.restore_latest()
+        if step >= 0:
+            params, opt_state = state["params"], state["opt"]
+            if data_state:
+                source.restore(data_state)
+            start_step = step + 1
+
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg, microbatch=run.microbatch,
+        gradient_compression=run.gradient_compression),
+        donate_argnums=(0, 1))
+
+    detector = StragglerDetector()
+    losses: list[float] = []
+    times: list[float] = []
+    step = start_step
+    failure_armed = inject_failure_at is not None
+    while step < num_steps:
+        try:
+            batch = next(loader)
+            t0 = time.perf_counter()
+            if failure_armed and step == inject_failure_at:
+                failure_armed = False
+                raise RuntimeError("injected node failure")
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            detector.observe(step, dt)
+            losses.append(loss)
+            times.append(dt)
+            if log_every and step % log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{dt*1e3:.0f} ms")
+            if ckpt and checkpoint_every and step % checkpoint_every == 0 \
+                    and step > 0:
+                ckpt.save(step, {"params": params, "opt": opt_state},
+                          source.state())
+            step += 1
+        except RuntimeError as e:
+            if "injected node failure" not in str(e) or ckpt is None:
+                raise
+            restarts += 1
+            ckpt.wait()
+            state, data_state, last = ckpt.restore_latest()
+            if last < 0:
+                raise RuntimeError("failure before first checkpoint") from e
+            params, opt_state = state["params"], state["opt"]
+            if data_state:
+                source.restore(data_state)
+            step = last + 1
+            print(f"[fault-tolerance] restored step {last}, resuming")
+    if ckpt:
+        ckpt.wait()
+    return TrainResult(steps=step - start_step,
+                       final_loss=losses[-1] if losses else float("nan"),
+                       losses=losses, step_times=times, restarts=restarts)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run with the default single CPU device — only the dry-run process
+# forces 512 host devices (see src/repro/launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,132 @@
+"""Compute API: analytical / systolic / profiling / cache / mixed."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimators import (CachedEstimator, MixedEstimator, PRESETS,
+                                   ProfilingEstimator, RooflineEstimator,
+                                   SystolicEstimator)
+from repro.core.ir import parse
+from repro.core.slicing import linear_split
+from repro.core.systems import TPU_V5E, TPU_V3_CORE, host_system
+
+
+@pytest.fixture(scope="module")
+def gemm_region():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((512, 512), jnp.bfloat16),
+        jax.ShapeDtypeStruct((512, 512), jnp.bfloat16)).as_text()
+    prog = parse(txt)
+    segs = linear_split(prog)
+    assert len(segs) == 1
+    return prog, segs[0].region
+
+
+class TestRoofline:
+    def test_compute_bound_gemm(self, gemm_region):
+        _, region = gemm_region
+        est = RooflineEstimator(TPU_V5E, mode="region")
+        t = est.get_run_time_estimate(region)
+        flops = 2 * 512**3
+        assert t >= flops / TPU_V5E.flops_for("bf16") * 0.99
+
+    def test_per_op_slower_than_region(self, gemm_region):
+        _, region = gemm_region
+        fused = RooflineEstimator(TPU_V5E, mode="region")
+        perop = RooflineEstimator(TPU_V5E, mode="per-op",
+                                  include_overheads=True)
+        assert perop.get_run_time_estimate(region) >= \
+            fused.get_run_time_estimate(region)
+
+    def test_faster_system_faster_estimate(self, gemm_region):
+        _, region = gemm_region
+        t_v3 = RooflineEstimator(TPU_V3_CORE).get_run_time_estimate(region)
+        t_v5 = RooflineEstimator(TPU_V5E).get_run_time_estimate(region)
+        assert t_v5 < t_v3
+
+
+class TestSystolic:
+    def test_supports_gemm_region(self, gemm_region):
+        _, region = gemm_region
+        est = SystolicEstimator(TPU_V5E, "cocossim")
+        assert est.supports(region)
+
+    def test_preset_ordering_large_gemm(self):
+        """scalesim (no double buffer) >= cocossim >= zigzag (compute only)."""
+        ts = {p: SystolicEstimator(TPU_V5E, p).gemm_latency(4096, 4096, 4096)
+              for p in PRESETS}
+        assert ts["scalesim"] >= ts["cocossim"] >= ts["zigzag"]
+
+    def test_never_faster_than_mxu_peak(self):
+        est = SystolicEstimator(TPU_V5E, "zigzag")
+        for n in (256, 1024, 4096):
+            t = est.gemm_latency(n, n, n)
+            peak = TPU_V5E.mxu_rows * TPU_V5E.mxu_cols * 2 \
+                * TPU_V5E.n_mxu * TPU_V5E.clock_hz
+            assert t >= 2 * n**3 / peak * 0.99
+
+    @settings(max_examples=30, deadline=None)
+    @given(m=st.integers(8, 4096), n=st.integers(8, 4096),
+           k=st.integers(8, 4096))
+    def test_latency_positive_and_monotone_in_k(self, m, n, k):
+        est = SystolicEstimator(TPU_V5E, "cocossim")
+        t1 = est.gemm_latency(m, n, k)
+        t2 = est.gemm_latency(m, n, 2 * k)
+        assert 0 < t1 <= t2 * 1.001
+
+
+class TestMixed:
+    def test_fallback_for_non_gemm(self):
+        def f(x):
+            return jnp.cumsum(jnp.sin(x))
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((4096,), jnp.float32)).as_text()
+        region = linear_split(parse(txt))[0].region
+        sysl = SystolicEstimator(TPU_V5E, "cocossim")
+        assert not sysl.supports(region)
+        mixed = MixedEstimator(sysl, RooflineEstimator(TPU_V5E))
+        assert mixed.get_run_time_estimate(region) > 0
+
+
+class TestCache:
+    def test_hit_semantics(self, gemm_region):
+        _, region = gemm_region
+        cached = CachedEstimator(RooflineEstimator(TPU_V5E))
+        t1 = cached.get_run_time_estimate(region)
+        t2 = cached.get_run_time_estimate(region)
+        assert t1 == t2
+        assert cached.stats.hits == 1 and cached.stats.misses == 1
+
+    def test_hw_key_separates_systems(self, gemm_region):
+        _, region = gemm_region
+        c1 = CachedEstimator(RooflineEstimator(TPU_V5E))
+        c2 = CachedEstimator(RooflineEstimator(TPU_V3_CORE))
+        assert c1._key(region) != c2._key(region)
+
+    def test_persistence(self, gemm_region, tmp_path):
+        _, region = gemm_region
+        path = str(tmp_path / "cache.json")
+        c1 = CachedEstimator(RooflineEstimator(TPU_V5E), persist_path=path)
+        c1.get_run_time_estimate(region)
+        c1.flush()
+        c2 = CachedEstimator(RooflineEstimator(TPU_V5E), persist_path=path)
+        c2.get_run_time_estimate(region)
+        assert c2.stats.hits == 1 and c2.stats.misses == 0
+
+
+class TestProfiling:
+    def test_executes_region(self, gemm_region):
+        prog, region = gemm_region
+        est = ProfilingEstimator(program=prog, runs=2)
+        t = est.get_run_time_estimate(region)
+        assert est.emit_failures == 0
+        assert 1e-6 < t < 10.0
+
+    def test_compute_api_surface(self, gemm_region):
+        prog, _ = gemm_region
+        est = ProfilingEstimator(program=prog, runs=3)
+        assert est.get_exec_args()["runs"] == 3
+        assert "backend" in est.get_compile_args()

@@ -1,0 +1,118 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+        (2, 4, 2, 256, 256, 64),
+        (1, 4, 4, 128, 256, 64),
+        (2, 2, 2, 256, 256, 32),
+        (1, 8, 2, 128, 128, 128),
+    ])
+    def test_matches_ref_causal(self, b, hq, hkv, sq, skv, d):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hkv, skv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hkv, skv, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        kr = jnp.repeat(k, hq // hkv, axis=1)
+        vr = jnp.repeat(v, hq // hkv, axis=1)
+        ref = attention_ref(q, kr, vr, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window,cap,causal", [
+        (128, 0.0, True), (0, 50.0, True), (64, 30.0, True), (0, 0.0, False),
+    ])
+    def test_masking_variants(self, window, cap, causal):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=cap)
+        ref = attention_ref(q, k, v, causal=causal, window=window,
+                            logit_cap=cap)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32), atol=3e-2)
+
+    def test_block_shape_independence(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (1, 2, 512, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+        a = flash_attention(q, k, v, block_q=128, block_k=128)
+        b = flash_attention(q, k, v, block_q=256, block_k=64)
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+        (2, 128, 4, 32, 1, 16, 32),
+        (1, 256, 8, 64, 2, 32, 64),
+        (1, 64, 2, 16, 1, 8, 16),
+    ])
+    def test_matches_sequential_ref(self, b, s, h, p, g, n, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bi = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+        ci = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+        y, st = ssd_scan(x, dt, a, bi, ci, chunk=chunk)
+        yr, sr = ssd_ref(x, dt, a, bi, ci)
+        np.testing.assert_allclose(y, yr, atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(st, sr, atol=2e-3, rtol=2e-3)
+
+    def test_initial_state_continuation(self):
+        """Scanning two halves with state carry == scanning the whole."""
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        b, s, h, p, g, n = 1, 128, 2, 16, 1, 8
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bi = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+        ci = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+        y_full, st_full = ssd_scan(x, dt, a, bi, ci, chunk=32)
+        half = s // 2
+        y1, st1 = ssd_scan(x[:, :half], dt[:, :half], a, bi[:, :half],
+                           ci[:, :half], chunk=32)
+        y2, st2 = ssd_scan(x[:, half:], dt[:, half:], a, bi[:, half:],
+                           ci[:, half:], chunk=32, initial_state=st1)
+        np.testing.assert_allclose(
+            jnp.concatenate([y1, y2], axis=1), y_full, atol=2e-3)
+        np.testing.assert_allclose(st2, st_full, atol=2e-3)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(4, 128, 512), (2, 64, 1024),
+                                       (128, 768), (1, 1, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, shape, dtype)
+        w = jax.random.normal(key, shape[-1:], dtype)
+        out = rmsnorm(x, w)
+        ref = rmsnorm_ref(x, w)
+        atol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(out.astype(np.float32),
+                                   ref.astype(np.float32), atol=atol)

@@ -1,0 +1,122 @@
+"""Collective cost models + event-driven scheduler, incl. hypothesis
+property tests on scheduler invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ir.collectives import CommSpec
+from repro.core.network import (AllToAllNode, Dragonfly, MultiPod, Torus,
+                                collective_time, simulate)
+from repro.core.trace import Trace
+
+
+def mk_spec(kind, size, g):
+    return CommSpec(kind=kind, bytes_in=size, bytes_out=size,
+                    group_size=g, num_groups=1)
+
+
+class TestCollectiveModels:
+    def test_all_reduce_ring_formula(self):
+        topo = AllToAllNode(num_devices=8, link_bw=100e9, link_latency=0)
+        t = collective_time(mk_spec("all_reduce", 1e9, 8), topo)
+        # ring: 2*(g-1)/g * S / (2*B bidirectional)
+        expected = 2 * 7 / 8 * 1e9 / (2 * 100e9)
+        assert t == pytest.approx(expected, rel=1e-6)
+
+    def test_all_gather_half_of_all_reduce(self):
+        topo = Torus(dims=(4, 4), link_latency=0)
+        ar = collective_time(mk_spec("all_reduce", 1e8, 16), topo)
+        ag = collective_time(mk_spec("all_gather", 1e8, 16), topo)
+        assert ag == pytest.approx(ar / 2, rel=1e-6)
+
+    def test_group_of_one_free(self):
+        topo = Torus()
+        assert collective_time(mk_spec("all_reduce", 1e9, 1), topo) == 0.0
+
+    def test_compression_scales_payload(self):
+        topo = Torus(link_latency=0)
+        full = collective_time(mk_spec("all_reduce", 1e9, 16), topo)
+        quart = collective_time(mk_spec("all_reduce", 1e9, 16), topo,
+                                compression=0.25)
+        assert quart == pytest.approx(full / 4, rel=1e-6)
+
+    def test_hierarchical_dragonfly_slower_than_intranode(self):
+        topo = Dragonfly(num_nodes=8, gpus_per_node=4)
+        intra = collective_time(mk_spec("all_reduce", 1e8, 4), topo)
+        inter = collective_time(mk_spec("all_reduce", 1e8, 32), topo)
+        assert inter > intra
+
+    def test_multipod_dcn_bottleneck(self):
+        topo = MultiPod(pod=Torus(dims=(16, 16)), num_pods=2)
+        in_pod = collective_time(mk_spec("all_reduce", 1e8, 256), topo)
+        x_pod = collective_time(mk_spec("all_reduce", 1e8, 512), topo)
+        assert x_pod > in_pod
+
+
+def _chain_trace(durs, comm_every=0):
+    t = Trace()
+    prev = None
+    for i, d in enumerate(durs):
+        deps = [prev] if prev is not None else []
+        if comm_every and i % comm_every == comm_every - 1:
+            prev = t.add_comm("all_reduce", 1e6, 4, deps=deps)
+        else:
+            prev = t.add_comp(f"c{i}", d * 1e6, deps=deps)
+    return t
+
+
+class TestScheduler:
+    def test_serial_chain_sums(self):
+        t = _chain_trace([1.0, 2.0, 3.0])
+        res = simulate(t, Torus())
+        assert res.makespan_s == pytest.approx(6.0, rel=1e-6)
+
+    def test_straggler_scales_comm_only(self):
+        t = _chain_trace([1.0] * 4, comm_every=2)
+        base = simulate(t, Torus(), straggler_factor=1.0)
+        slow = simulate(t, Torus(), straggler_factor=3.0)
+        assert slow.comm_busy_s == pytest.approx(3 * base.comm_busy_s)
+        assert slow.compute_busy_s == pytest.approx(base.compute_busy_s)
+
+    def test_overlap_no_worse_than_serial(self):
+        t = Trace()
+        a = t.add_comp("a", 100.0)
+        c = t.add_comm("all_reduce", 1e8, 8, deps=[a])
+        b = t.add_comp("b", 100.0, deps=[a])   # independent of the comm
+        t.add_comp("join", 1.0, deps=[b, c])
+        serial = simulate(t, Torus(), overlap=False)
+        over = simulate(t, Torus(), overlap=True)
+        assert over.makespan_s <= serial.makespan_s
+        assert over.exposed_comm_s < serial.exposed_comm_s + 1e-12
+
+    def test_cycle_detection(self):
+        t = Trace()
+        t.add_comp("a", 1.0)
+        t.nodes[0].data_deps = [0]
+        with pytest.raises(ValueError):
+            t.validate()
+
+    @settings(max_examples=40, deadline=None)
+    @given(durs=st.lists(st.floats(0.001, 10.0), min_size=1, max_size=24),
+           overlap=st.booleans(),
+           straggler=st.floats(1.0, 4.0))
+    def test_makespan_bounds(self, durs, overlap, straggler):
+        """Property: max(comp node) <= makespan <= sum(all nodes)."""
+        t = _chain_trace(durs, comm_every=3)
+        res = simulate(t, Torus(), overlap=overlap,
+                       straggler_factor=straggler)
+        comp_durs = [n.duration_us * 1e-6 for n in t.nodes
+                     if n.node_type == "COMP_NODE"]
+        total = res.compute_busy_s + res.comm_busy_s
+        assert res.makespan_s <= total + 1e-9
+        if comp_durs:
+            assert res.makespan_s >= max(comp_durs) - 1e-9
+        assert res.exposed_comm_s >= -1e-12
+
+    @settings(max_examples=25, deadline=None)
+    @given(size=st.floats(1e3, 1e12), g=st.integers(2, 512))
+    def test_collective_time_monotone_in_size(self, size, g):
+        topo = Torus(dims=(32, 32))
+        t1 = collective_time(mk_spec("all_reduce", size, g), topo)
+        t2 = collective_time(mk_spec("all_reduce", size * 2, g), topo)
+        assert t2 >= t1
+        assert t1 > 0

@@ -1,0 +1,117 @@
+"""End-to-end pipeline: export -> slice -> estimate -> netsim, plus the
+Chakra trace format and the perf-predict pre-flight."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.estimators import (MixedEstimator, ProfilingEstimator,
+                                   RooflineEstimator, SystolicEstimator)
+from repro.core.network import AllToAllNode, Torus
+from repro.core.pipeline import Workload, export_workload, predict
+from repro.core.systems import TPU_V5E, get_system
+from repro.core.trace import Trace
+
+
+@pytest.fixture(scope="module")
+def workload():
+    def step(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(h.astype(jnp.float32) ** 2)
+    w = jax.ShapeDtypeStruct((6, 128, 128), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+    return export_workload(jax.jit(jax.grad(step)), w, x, name="toy")
+
+
+class TestExport:
+    def test_both_fidelities(self, workload):
+        assert workload.stablehlo_text and workload.hlo_text
+        assert workload.program("raw").dialect == "stablehlo"
+        assert workload.program("optimized").dialect == "hlo"
+
+    def test_meta_captured(self, workload):
+        assert "cost_analysis" in workload.meta
+        assert workload.meta["cost_analysis"].get("flops", 0) > 0
+
+
+class TestPredict:
+    @pytest.mark.parametrize("slicer", ["linear", "dep"])
+    @pytest.mark.parametrize("fidelity", ["raw", "optimized"])
+    def test_all_paths_produce_time(self, workload, slicer, fidelity):
+        prog = workload.program(fidelity)
+        p = predict(prog, RooflineEstimator(TPU_V5E), Torus(dims=(2, 2)),
+                    slicer=slicer, name="toy")
+        assert p.step_time_s > 0
+        assert p.compute_s > 0
+        assert p.num_segments >= 1
+
+    def test_overlap_never_slower(self, workload):
+        prog = workload.program("optimized")
+        base = predict(prog, RooflineEstimator(TPU_V5E), Torus(),
+                       slicer="dep", overlap=False)
+        over = predict(prog, RooflineEstimator(TPU_V5E), Torus(),
+                       slicer="dep", overlap=True)
+        assert over.step_time_s <= base.step_time_s + 1e-12
+
+    def test_mixed_estimator_path(self, workload):
+        prog = workload.program("optimized")
+        est = MixedEstimator(SystolicEstimator(TPU_V5E, "onnxim"),
+                             RooflineEstimator(TPU_V5E))
+        p = predict(prog, est, Torus(), slicer="linear")
+        assert p.step_time_s > 0
+
+    def test_cache_reused_across_identical_layers(self):
+        def f(w, x):
+            for i in range(6):
+                x = jax.lax.optimization_barrier(jnp.tanh(x @ w[i]))
+            return x
+        w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+        wl = export_workload(jax.jit(f), w, x, name="layers",
+                             compile_workload=False)
+        p = predict(wl.program("raw"), RooflineEstimator(TPU_V5E), Torus(),
+                    slicer="linear", name="layers")
+        # 6 identical per-layer regions -> 5+ cache hits
+        assert p.cache_stats.hits >= 5
+        assert p.cache_stats.hits > p.cache_stats.misses
+
+    def test_cross_system_ordering(self, workload):
+        prog = workload.program("optimized")
+        t = {}
+        for name in ("a100", "h100", "b200", "tpu-v5e"):
+            t[name] = predict(prog, RooflineEstimator(get_system(name)),
+                              AllToAllNode(num_devices=4),
+                              slicer="linear").step_time_s
+        assert t["b200"] < t["h100"] < t["a100"]
+
+    def test_straggler_increases_makespan(self, workload):
+        prog = workload.program("optimized")
+        base = predict(prog, RooflineEstimator(TPU_V5E), Torus(),
+                       slicer="linear")
+        slow = predict(prog, RooflineEstimator(TPU_V5E), Torus(),
+                       slicer="linear", straggler_factor=4.0)
+        assert slow.step_time_s >= base.step_time_s
+
+
+class TestTraceFormat:
+    def test_roundtrip(self, tmp_path):
+        t = Trace(meta={"workload": "x"})
+        a = t.add_comp("embed", 12.5)
+        b = t.add_comm("all_reduce", 1e6, 8, deps=[a])
+        t.add_comp("head", 3.5, deps=[b])
+        path = str(tmp_path / "trace.json")
+        t.save(path)
+        t2 = Trace.load(path)
+        assert len(t2.nodes) == 3
+        assert t2.nodes[1].comm_type == "ALL_REDUCE"
+        assert t2.nodes[1].data_deps == [0]
+        assert t2.total_comp_us == pytest.approx(16.0)
+        t2.validate()
+
+    def test_profiling_prediction_on_raw(self, workload):
+        prog = workload.program("raw")
+        est = ProfilingEstimator(program=prog, runs=1)
+        p = predict(prog, est, AllToAllNode(num_devices=1), slicer="linear")
+        assert est.emit_failures == 0
+        assert p.step_time_s > 0

@@ -1,0 +1,104 @@
+"""Logical-axis rule resolution, divisibility fallback, mesh construction."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (ACT_RULES_SEQ_SHARDED, ShardingRules,
+                                        logical_to_spec)
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device container: a (1,1) mesh exercises the resolution code
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class TestRuleResolution:
+    def test_basic_mapping(self, mesh):
+        rules = ShardingRules()
+        spec = logical_to_spec(("embed", "mlp"), rules.param_rules, mesh,
+                               (1024, 4096))
+        assert spec == P("data", "model")
+
+    def test_non_divisible_dim_dropped(self, mesh):
+        big = make_mesh((1, 1), ("data", "model"))
+        rules = ShardingRules()
+        # 40 heads on a 16-way model axis: the (1,1) mesh divides anything,
+        # so emulate with explicit divisibility check on a fake mesh below
+        spec = logical_to_spec(("heads",), rules.act_rules, big, (40,))
+        assert spec in (P("model"), P())
+
+    def test_seq_sharded_rules(self, mesh):
+        spec = logical_to_spec(("batch", "cache_seq"),
+                               ACT_RULES_SEQ_SHARDED, mesh, (1, 524288))
+        # batch=1 cannot take an axis of size>1; cache_seq goes to data
+        assert spec in (P(None, "data"), P("pod", "data"), P())
+
+    def test_no_double_axis_use(self, mesh):
+        rules = ShardingRules()
+        spec = logical_to_spec(("heads", "mlp"), rules.act_rules, mesh,
+                               (16, 4096))
+        flat = [s for s in spec if s is not None]
+        names = []
+        for s in flat:
+            names.extend(s if isinstance(s, tuple) else (s,))
+        assert len(names) == len(set(names))
+
+    def test_overrides(self):
+        rules = ShardingRules().with_overrides(params={"embed": None})
+        assert rules.param_rules["embed"] is None
+        assert ShardingRules().param_rules["embed"] == "data"
+
+
+class TestDivisibility:
+    """Fake meshes with >1 axis size need >1 devices; emulate the pure
+    resolution logic through a stub mesh object."""
+
+    class _FakeMesh:
+        axis_names = ("data", "model")
+
+        class _Dev:
+            shape = (16, 16)
+        devices = _Dev()
+
+    def test_drop_non_dividing(self):
+        rules = ShardingRules()
+        spec = logical_to_spec(("heads",), rules.act_rules, self._FakeMesh(),
+                               (40,))
+        assert spec == P()      # 40 % 16 != 0 -> replicated
+
+    def test_keep_dividing(self):
+        rules = ShardingRules()
+        spec = logical_to_spec(("heads",), rules.act_rules, self._FakeMesh(),
+                               (64,))
+        assert spec == P("model")
+
+    def test_tuple_rule_prefix_fallback(self):
+        class _Mesh3:
+            axis_names = ("pod", "data", "model")
+
+            class _Dev:
+                shape = (2, 16, 16)
+            devices = _Dev()
+
+        rules = ShardingRules()
+        # batch 32 divides pod*data=32
+        spec = logical_to_spec(("batch",), rules.act_rules, _Mesh3(), (32,))
+        assert spec == P(("pod", "data"))
+        # batch 2 only divides pod
+        spec = logical_to_spec(("batch",), rules.act_rules, _Mesh3(), (2,))
+        assert spec == P("pod")
+        # batch 1 divides nothing
+        spec = logical_to_spec(("batch",), rules.act_rules, _Mesh3(), (1,))
+        assert spec == P()
+
+
+class TestProductionMeshShape:
+    def test_shapes_declared(self):
+        import inspect
+
+        from repro.launch import mesh as mesh_mod
+        src = inspect.getsource(mesh_mod.make_production_mesh)
+        assert "(2, 16, 16)" in src and "(16, 16)" in src
+        assert '"pod", "data", "model"' in src

@@ -1,0 +1,103 @@
+"""Slicer invariants: coverage, alternation, dependency soundness."""
+import pytest
+
+from repro.core.ir import parse
+from repro.core.ir.graph import ZERO_COST_OPS
+from repro.core.slicing import (dependency_aware_split, linear_split,
+                                region_fingerprint)
+from tests.test_ir_parser import CANNED_HLO
+
+
+@pytest.fixture(scope="module")
+def prog():
+    return parse(CANNED_HLO)
+
+
+class TestLinearSplit:
+    def test_alternation_and_counts(self, prog):
+        segs = linear_split(prog)
+        comm = [s for s in segs if s.kind == "COMM"]
+        assert len(comm) == 1
+        assert comm[0].repeat == 12            # inside the while body
+
+    def test_flop_conservation(self, prog):
+        """Sum of region flops × repeat == whole-program flops."""
+        from repro.core.ir import program_cost
+        segs = linear_split(prog)
+        total = sum(s.region.cost.flops * s.repeat
+                    for s in segs if s.kind == "COMP")
+        assert total == pytest.approx(program_cost(prog).flops, rel=1e-6)
+
+    def test_repeat_groups_share_group_id(self, prog):
+        segs = linear_split(prog)
+        in_loop = [s for s in segs if s.repeat == 12]
+        assert in_loop and len({s.group for s in in_loop}) == 1
+
+
+class TestDependencyAwareSplit:
+    def test_acyclic_and_forward(self, prog):
+        segs, deps = dependency_aware_split(prog)
+        for idx, dset in deps.items():
+            for d in dset:
+                assert d < idx, "dependency edges must point backwards"
+
+    def test_loop_iterations_serialized(self, prog):
+        """Each unrolled iteration must depend (transitively) on the
+        previous one — otherwise the scheduler could overlap iterations."""
+        segs, deps = dependency_aware_split(prog)
+        comm_idx = [i for i, s in enumerate(segs) if s.kind == "COMM"]
+        assert len(comm_idx) == 12             # unrolled
+        reach: dict[int, set[int]] = {}
+        for i in range(len(segs)):
+            r = set(deps.get(i, set()))
+            for d in deps.get(i, set()):
+                r |= reach.get(d, set())
+            reach[i] = r
+        for a, b in zip(comm_idx[:-1], comm_idx[1:]):
+            assert a in reach[b], f"comm {b} does not depend on comm {a}"
+
+    def test_flop_conservation(self, prog):
+        from repro.core.ir import program_cost
+        segs, _ = dependency_aware_split(prog)
+        total = sum(s.region.cost.flops for s in segs if s.kind == "COMP")
+        assert total == pytest.approx(program_cost(prog).flops, rel=1e-6)
+
+
+class TestFingerprint:
+    def test_identical_regions_share_fingerprint(self, prog):
+        segs, _ = dependency_aware_split(prog)
+        fps = [s.region.fingerprint for s in segs if s.kind == "COMP"
+               and s.region.cost.flops > 0]
+        # 12 unrolled iterations of an identical body
+        assert len(fps) >= 12
+        assert len(set(fps)) < len(fps)
+
+    def test_fingerprint_distinguishes_shapes(self):
+        from repro.core.ir.graph import OpNode
+        from repro.core.ir.types import TensorType
+
+        def mk(shape):
+            t = TensorType(shape, "f32")
+            return [OpNode(uid=1, results=("%a",), op="dot_general",
+                           operands=("%x", "%y"), operand_types=(t, t),
+                           result_types=(t,))]
+        assert region_fingerprint(mk((4, 4))) != region_fingerprint(mk((8, 8)))
+
+
+class TestBarrierSplitting:
+    def test_barrier_splits_regions(self):
+        import jax
+        import jax.numpy as jnp
+
+        def f(x):
+            for _ in range(3):
+                x = jax.lax.optimization_barrier(jnp.tanh(x @ x))
+            return x
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((32, 32), jnp.float32)).as_text()
+        prog = parse(txt)
+        segs = linear_split(prog)
+        comp = [s for s in segs if s.kind == "COMP"]
+        assert len(comp) == 3
+        fps = {s.region.fingerprint for s in comp}
+        assert len(fps) == 1                   # identical layer regions

@@ -1,0 +1,61 @@
+"""System-level integration: a dry-run cell in a subprocess (512 host
+devices), dry-run artifact schema, end-to-end perf-predict example."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """One real (arch × shape × mesh) cell compiles on the 16×16 mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-370m", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    path = tmp_path / "mamba2-370m__decode_32k__16x16.json"
+    rec = json.loads(path.read_text())
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                           "collective_s")
+    assert rec["parsed_per_chip"]["flops"] > 0
+
+
+def test_dryrun_artifacts_complete():
+    """All 80 cells exist and none failed (the sweep must have been run)."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("dry-run sweep not yet executed")
+    from repro.configs.base import SHAPES
+    from repro.models import ARCH_IDS
+    missing, failed = [], []
+    for mesh in ("16x16", "2x16x16"):
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                p = os.path.join(art, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(p):
+                    missing.append((arch, shape, mesh))
+                    continue
+                rec = json.load(open(p))
+                if rec["status"] == "fail":
+                    failed.append((arch, shape, mesh))
+    assert not missing, f"missing cells: {missing[:5]}"
+    assert not failed, f"failed cells: {failed[:5]}"
+
+
+def test_examples_importable():
+    import importlib.util
+    for name in ("quickstart", "perf_predict", "train_lm", "serve_decode"):
+        path = os.path.join(REPO, "examples", f"{name}.py")
+        assert os.path.exists(path), f"missing example {name}"
+        spec = importlib.util.spec_from_file_location(name, path)
+        assert spec is not None
