@@ -15,16 +15,18 @@ from benchmarks.common import build_llama_step, emit  # noqa: E402
 
 
 def _profile_time(prog, use_cache: bool) -> tuple[float, object]:
+    """One campaign job, cache on/off — the unit the campaign engine runs."""
     import time
     from repro.core.estimators import ProfilingEstimator
-    from repro.core.estimators.cache import CachedEstimator
     from repro.core.network import AllToAllNode
-    from repro.core.pipeline import predict
+    from repro.core.pipeline import PredictionJob
 
-    est = ProfilingEstimator(program=prog, runs=2)
+    job = PredictionJob(
+        program=prog, estimator=ProfilingEstimator(program=prog, runs=2),
+        topology=AllToAllNode(num_devices=4, link_bw=10e9),
+        slicer="dep", use_cache=use_cache, name="cache-exp")
     t0 = time.perf_counter()
-    p = predict(prog, est, AllToAllNode(num_devices=4, link_bw=10e9),
-                slicer="dep", use_cache=use_cache, name="cache-exp")
+    p = job.run()
     return time.perf_counter() - t0, p.cache_stats
 
 

@@ -16,46 +16,57 @@ from benchmarks.common import build_llama_step, emit  # noqa: E402
 
 
 def main() -> None:
-    from repro.core.estimators import RooflineEstimator
-    from repro.core.network import Dragonfly
-    from repro.core.pipeline import export_workload, predict
-    from repro.core.systems import GH200
+    from repro.campaign import (CampaignSpec, EstimatorSpec, TopologySpec,
+                                WorkloadSpec, run_campaign)
+    from repro.core.pipeline import export_workload
     from repro.launch.mesh import make_mesh
 
     rows = []
-    # paper: batch 2/GPU at 16 GPUs, 1/GPU at 128 GPUs
+    # paper: batch 2/GPU at 16 GPUs, 1/GPU at 128 GPUs.  Each scale has
+    # its own workload AND its own fabric, so each is a 1-point-per-
+    # estimator campaign (profiling-class = per-op costing of the raw
+    # export with launch overheads — see fig6 for the rationale).
     for n_gpus, per_dev_batch, nodes_per_router, routers, groups in [
             (16, 2, 1, 2, 2), (128, 1, 4, 4, 2)]:
         mesh = make_mesh((n_gpus, 1), ("data", "model"))
         cfg, jitted, abs_args, _ = build_llama_step(
             "llama2-7b", seq=2048, batch=n_gpus * per_dev_batch, mesh=mesh,
             train=True)
+        name = f"llama2-{n_gpus}"
         with mesh:
-            w = export_workload(jitted, *abs_args, name="llama2-7b")
-        topo = Dragonfly(num_nodes=n_gpus // 4, gpus_per_node=4,
-                         nodes_per_router=nodes_per_router,
-                         routers_per_group=routers, groups=groups,
-                         intra_bw=150e9, inter_bw=25e9)
-        prog_opt = w.program("optimized")
-        prog_raw = w.program("raw")
-        p_ana = predict(prog_opt, RooflineEstimator(GH200), topo,
-                        slicer="linear", name=f"llama2-{n_gpus}")
-        # profiling-class (pessimistic): per-op costing of the raw export
-        # with launch overheads — see fig6 for the rationale
-        pess = RooflineEstimator(GH200, mode="per-op",
-                                 include_overheads=True)
-        p_prof = predict(prog_raw, pess, topo, slicer="linear",
-                         name=f"llama2-{n_gpus}")
-        prof_total = p_prof.step_time_s + p_ana.comm_s
+            w = export_workload(jitted, *abs_args, name=name)
+        spec = CampaignSpec(
+            name=f"fig9-{n_gpus}",
+            workloads=[WorkloadSpec(name=name)],
+            systems=["gh200"],
+            estimators=[
+                EstimatorSpec.from_dict({"kind": "roofline"}),
+                EstimatorSpec.from_dict(
+                    {"kind": "roofline", "fidelity": "raw",
+                     "options": {"mode": "per-op",
+                                 "include_overheads": True}}),
+            ],
+            slicers=["linear"],
+            topologies=[TopologySpec.from_dict({"kind": "dragonfly", "params": {
+                "num_nodes": n_gpus // 4, "gpus_per_node": 4,
+                "nodes_per_router": nodes_per_router,
+                "routers_per_group": routers, "groups": groups,
+                "intra_bw": 150e9, "inter_bw": 25e9}})],
+        )
+        res = run_campaign(spec, workloads={name: w}, executor="thread")
+        idx = {r["estimator"]: r for r in res.ok_rows}
+        p_ana = idx["roofline"]
+        p_prof = idx["roofline-per-op-ovh@raw"]
+        prof_total = p_prof["step_time_s"] + p_ana["comm_s"]
         rows.append({
             "name": f"fig9-{n_gpus}gpu",
-            "us_per_call": p_ana.step_time_s * 1e6,
-            "analytical_ms": round(p_ana.step_time_s * 1e3, 1),
+            "us_per_call": p_ana["step_time_s"] * 1e6,
+            "analytical_ms": round(p_ana["step_time_s"] * 1e3, 1),
             "profiling_ms": round(prof_total * 1e3, 1),
-            "comm_ms": round(p_ana.comm_s * 1e3, 1),
-            "comm_fraction": round(p_ana.comm_s
-                                   / max(p_ana.step_time_s, 1e-12), 3),
-            "num_comm_nodes": p_ana.num_comm,
+            "comm_ms": round(p_ana["comm_s"] * 1e3, 1),
+            "comm_fraction": round(p_ana["comm_s"]
+                                   / max(p_ana["step_time_s"], 1e-12), 3),
+            "num_comm_nodes": p_ana["num_comm"],
         })
     # derived claim check: comm fraction grows with scale
     rows.append({

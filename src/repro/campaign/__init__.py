@@ -1,0 +1,34 @@
+"""Prediction-campaign engine: declarative grids of
+workloads × systems × estimators × slicers × topologies × knobs, executed
+in parallel over one shared persistent (H, C, R) latency cache.
+
+Quickstart::
+
+    from repro.campaign import CampaignSpec, run_campaign
+
+    spec = CampaignSpec.from_dict({
+        "name": "sweep",
+        "workloads": [{"name": "toy", "arch": "llama3-100m",
+                       "seq": 256, "batch": 2, "mode": "forward"}],
+        "systems": ["a100", "h100", "b200"],
+        "estimators": [{"kind": "roofline"},
+                       {"kind": "roofline", "fidelity": "raw",
+                        "options": {"mode": "per-op",
+                                    "include_overheads": True}}],
+        "slicers": ["linear", "dep"],
+    })
+    result = run_campaign(spec, out_dir="artifacts/sweep",
+                          executor="thread", cache_path=".cache/hcr.json")
+
+or from the shell::
+
+    python -m repro.campaign spec.json --out artifacts/sweep
+"""
+from .runner import CampaignResult, run_campaign
+from .spec import (CampaignSpec, EstimatorSpec, JobSpec, TopologySpec,
+                   WorkloadSpec)
+
+__all__ = [
+    "CampaignSpec", "CampaignResult", "EstimatorSpec", "JobSpec",
+    "TopologySpec", "WorkloadSpec", "run_campaign",
+]

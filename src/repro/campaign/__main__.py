@@ -1,0 +1,75 @@
+"""CLI entry point: ``python -m repro.campaign spec.json [options]``.
+
+The spec file is the JSON form of :class:`~repro.campaign.spec.CampaignSpec`
+(see that module and ``examples/campaign_sweep.py``).  Minimal example::
+
+    {
+      "name": "gpu-sweep",
+      "workloads": [{"name": "llama3-100m", "arch": "llama3-100m",
+                     "seq": 256, "batch": 2}],
+      "systems": ["a100", "h100", "b200"],
+      "estimators": [{"kind": "roofline"},
+                     {"kind": "roofline", "fidelity": "raw",
+                      "options": {"mode": "per-op",
+                                  "include_overheads": true}}],
+      "slicers": ["linear", "dep"]
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .runner import run_campaign
+from .spec import CampaignSpec
+from .summary import format_table
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description="Run a prediction campaign from a JSON grid spec.")
+    ap.add_argument("spec", help="path to the campaign spec (JSON)")
+    ap.add_argument("--out", default="artifacts/campaign",
+                    help="output directory for results.jsonl/csv + "
+                         "summary.json (default: artifacts/campaign)")
+    ap.add_argument("--executor", default="thread",
+                    choices=("serial", "thread", "process"),
+                    help="job executor (default: thread)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="max parallel workers (default: executor's choice)")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="persistent (H,C,R) cache file shared across runs")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the expanded grid and exit")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-job progress lines")
+    args = ap.parse_args(argv)
+
+    spec = CampaignSpec.from_json(args.spec)
+    jobs = spec.expand()
+    print(f"campaign {spec.name!r}: {len(jobs)} grid points "
+          f"({len(spec.workloads)} workloads × {len(spec.systems)} systems "
+          f"× {len(spec.estimators)} estimators × {len(spec.slicers)} "
+          f"slicers × {len(spec.topologies)} topologies)", flush=True)
+    if args.dry_run:
+        for j in jobs:
+            r = j.to_row()
+            print("  " + " × ".join(str(r[k]) for k in
+                                    ("workload", "fidelity", "system",
+                                     "estimator", "slicer", "topology")))
+        return 0
+
+    result = run_campaign(
+        spec, out_dir=args.out, executor=args.executor,
+        max_workers=args.jobs, cache_path=args.cache,
+        progress=not args.quiet)
+    print(format_table(result.summary))
+    if result.csv_path:
+        print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
+              f"{result.summary_path}")
+    return 1 if result.summary["num_failed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

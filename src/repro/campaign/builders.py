@@ -1,0 +1,116 @@
+"""Materialize estimators, topologies, and workloads from campaign specs.
+
+Everything here turns a primitives-only spec into live pipeline objects,
+which is what lets :class:`~repro.campaign.spec.JobSpec` records cross a
+process boundary: the worker rebuilds the objects locally from the spec.
+"""
+from __future__ import annotations
+
+from ..core.estimators import (MixedEstimator, ProfilingEstimator,
+                               RooflineEstimator, SystolicEstimator)
+from ..core.estimators.base import ComputeEstimator
+from ..core.network import AllToAllNode, Dragonfly, MultiPod, Topology, Torus
+from ..core.pipeline import Workload, export_workload
+from ..core.systems import System, get_system
+from ..core.ir.graph import Program
+from .spec import EstimatorSpec, TopologySpec, WorkloadSpec
+
+ESTIMATOR_KINDS = ("roofline", "systolic", "mixed", "profiling")
+TOPOLOGY_KINDS = ("auto", "a2a", "dragonfly", "torus", "multipod")
+
+
+def build_estimator(spec: EstimatorSpec, system: System, *,
+                    system_name: str = "", program: Program | None = None
+                    ) -> ComputeEstimator:
+    opts = spec.options_dict
+    if spec.kind == "roofline":
+        return RooflineEstimator(
+            system, mode=opts.get("mode", "region"),
+            include_overheads=bool(opts.get("include_overheads", False)))
+    if spec.kind == "systolic":
+        return SystolicEstimator(system, opts.get("preset", "cocossim"))
+    if spec.kind == "mixed":
+        return MixedEstimator(
+            SystolicEstimator(system, opts.get("preset", "cocossim")),
+            RooflineEstimator(system))
+    if spec.kind == "profiling":
+        target = None if system_name == "host" else system
+        return ProfilingEstimator(program=program,
+                                  runs=int(opts.get("runs", 3)),
+                                  target_system=target)
+    raise ValueError(
+        f"unknown estimator kind {spec.kind!r}; have {ESTIMATOR_KINDS}")
+
+
+def build_topology(spec: TopologySpec, system: System) -> Topology:
+    p = spec.params_dict
+    kind = spec.kind
+    if kind == "auto":
+        # derive the family from the system's interconnect record — the
+        # cross-architecture axis: one grid, per-system native fabric.
+        # Only num_devices/link_bw come from the system so the numbers
+        # match a hand-built AllToAllNode/Torus with class defaults.
+        ic = system.interconnect
+        n = int(p.get("num_devices", 4))
+        if ic.kind in ("torus2d", "torus3d"):
+            dims = tuple(ic.params.get("dims", (2, 2)))
+            return Torus(dims=dims, link_bw=ic.link_bw)
+        return AllToAllNode(num_devices=n, link_bw=ic.link_bw)
+    if kind == "a2a":
+        return AllToAllNode(**p)
+    if kind == "dragonfly":
+        return Dragonfly(**p)
+    if kind == "torus":
+        if "dims" in p:
+            p = dict(p, dims=tuple(p["dims"]))
+        return Torus(**p)
+    if kind == "multipod":
+        p = dict(p)
+        pod = p.pop("pod", None)
+        if pod is not None:
+            pod = dict(pod)
+            if "dims" in pod:
+                pod["dims"] = tuple(pod["dims"])
+            p["pod"] = Torus(**pod)
+        return MultiPod(**p)
+    raise ValueError(
+        f"unknown topology kind {kind!r}; have {TOPOLOGY_KINDS}")
+
+
+def build_system(name: str) -> System:
+    return get_system(name)
+
+
+def build_workload(spec: WorkloadSpec) -> Workload:
+    """Materialize a workload: read pre-exported IR or export via jax."""
+    if spec.stablehlo_path or spec.hlo_path:
+        w = Workload(name=spec.name)
+        if spec.stablehlo_path:
+            with open(spec.stablehlo_path) as f:
+                w.stablehlo_text = f.read()
+        if spec.hlo_path:
+            with open(spec.hlo_path) as f:
+                w.hlo_text = f.read()
+        return w
+    return _export_from_arch(spec)
+
+
+def _export_from_arch(spec: WorkloadSpec) -> Workload:
+    import jax
+
+    from ..configs.base import ShapeConfig
+    from ..models import get_config, input_specs, model_specs
+    from ..models.params import abstract_params
+    from ..models.transformer import forward
+
+    cfg = get_config(spec.arch)
+    if spec.mode != "forward":
+        raise ValueError(
+            f"workload {spec.name!r}: CLI export supports mode='forward'; "
+            "for train steps pass pre-exported IR via stablehlo_path/"
+            "hlo_path or supply Workload objects through the API")
+    shape = ShapeConfig(spec.name, spec.seq, spec.batch, "train")
+    params_abs = abstract_params(model_specs(cfg))
+    batch_abs = input_specs(cfg, shape)
+    return export_workload(jax.jit(lambda p, b: forward(cfg, p, b)),
+                           params_abs, batch_abs, name=spec.name)

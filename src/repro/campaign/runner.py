@@ -1,0 +1,325 @@
+"""Campaign execution: expand the grid, run jobs in parallel, stream
+results, share one persistent (H, C, R) cache across all of it.
+
+Executors:
+
+  * ``serial``  — in-process, deterministic order;
+  * ``thread``  — ThreadPoolExecutor; jobs share one live cache store, so a
+    fingerprint evaluated by one job is a hit for every later job;
+  * ``process`` — ProcessPoolExecutor; each worker gets a snapshot of the
+    persistent cache at startup, computes independently, and ships its
+    fresh entries back for the parent to merge and save.
+
+Results stream to ``results.jsonl`` as jobs finish (crash-safe: a killed
+campaign keeps everything completed so far), then consolidate into
+``results.csv`` and ``summary.json``.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import threading
+import time
+from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
+                                ThreadPoolExecutor, wait)
+from dataclasses import dataclass, field
+
+from ..core.estimators.cache import PersistentCache
+from ..core.pipeline import PredictionJob, Workload
+from .builders import (build_estimator, build_system, build_topology,
+                       build_workload)
+from .spec import CampaignSpec, JobSpec
+from .summary import summarize
+
+EXECUTORS = ("serial", "thread", "process")
+
+# -------------------------- single-job execution --------------------------
+
+
+def _program_for(job: JobSpec, texts: dict, programs: dict,
+                 lock: threading.Lock | None = None):
+    """Parse (memoized) the right fidelity of the job's workload.
+
+    Returns (program, effective_fidelity) — the fidelity actually used,
+    which falls back optimized -> raw when no optimized HLO exists."""
+    from ..core.ir.parser import parse
+
+    wtexts = texts[job.workload]
+    fidelity = job.fidelity
+    if fidelity == "optimized" and not wtexts.get("optimized"):
+        fidelity = "raw"
+    key = (job.workload, fidelity)
+
+    def lookup_or_parse():
+        if key not in programs:
+            text = wtexts.get(fidelity)
+            if text is None:
+                raise ValueError(
+                    f"workload {job.workload!r}: no {fidelity} text")
+            programs[key] = parse(text)
+        return programs[key]
+
+    if lock:
+        # parse under the lock: concurrent first jobs of a thread campaign
+        # would otherwise each pay the (expensive) parse of the same text
+        with lock:
+            return lookup_or_parse(), fidelity
+    return lookup_or_parse(), fidelity
+
+
+def _execute(job: JobSpec, texts: dict, programs: dict, store,
+             lock: threading.Lock | None = None) -> tuple[dict, dict]:
+    """Run one grid point; returns (result_row, freshly_computed_entries)."""
+    t0 = time.perf_counter()
+    program, fidelity = _program_for(job, texts, programs, lock)
+    system = build_system(job.system)
+    estimator = build_estimator(job.estimator, system,
+                                system_name=job.system, program=program)
+    topology = build_topology(job.topology, system)
+    pjob = PredictionJob(
+        program=program, estimator=estimator, topology=topology,
+        slicer=job.slicer, overlap=job.overlap,
+        straggler_factor=job.straggler_factor, compression=job.compression,
+        name=job.workload, system_name=system.name, cache_store=store)
+    p = pjob.run()
+    row = dict(job.to_row())
+    row["fidelity"] = fidelity  # the fidelity actually costed
+    pred = p.to_row()
+    row["toolchain"] = pred.pop("estimator")
+    for k in ("workload", "system", "slicer"):
+        pred.pop(k, None)
+    row.update(pred)
+    row["job_wall_s"] = time.perf_counter() - t0
+    return row, dict(pjob.cached.new_entries)
+
+
+# process-pool worker state (one snapshot per worker process)
+_WORKER: dict = {}
+
+
+def _worker_init(texts: dict, cache_entries: dict) -> None:
+    _WORKER["texts"] = texts
+    _WORKER["programs"] = {}
+    _WORKER["store"] = dict(cache_entries)
+
+
+def _worker_run(job: JobSpec) -> tuple[dict, dict]:
+    return _execute(job, _WORKER["texts"], _WORKER["programs"],
+                    _WORKER["store"])
+
+
+# ------------------------------ the campaign ------------------------------
+
+
+@dataclass
+class CampaignResult:
+    name: str
+    rows: list[dict]                 # job_id-ordered; error rows included
+    summary: dict
+    jsonl_path: str | None = None
+    csv_path: str | None = None
+    summary_path: str | None = None
+    wall_s: float = 0.0
+    cache: dict = field(default_factory=dict)
+
+    @property
+    def ok_rows(self) -> list[dict]:
+        return [r for r in self.rows if "error" not in r]
+
+
+def _workload_texts(spec: CampaignSpec,
+                    workloads: dict[str, Workload] | None) -> dict:
+    """name -> {"raw": stablehlo, "optimized": hlo} for every grid workload.
+
+    In-memory ``workloads`` take precedence; anything else is materialized
+    from its spec (file read or jax export)."""
+    provided = dict(workloads or {})
+    texts: dict[str, dict] = {}
+    for wspec in spec.workloads:
+        w = provided.get(wspec.name)
+        if w is None:
+            w = build_workload(wspec)
+        texts[wspec.name] = {"raw": w.stablehlo_text,
+                             "optimized": w.hlo_text}
+    return texts
+
+
+def run_campaign(spec: CampaignSpec, *,
+                 workloads: dict[str, Workload] | None = None,
+                 out_dir: str | None = None,
+                 executor: str = "serial",
+                 max_workers: int | None = None,
+                 cache_path: str | None = None,
+                 progress: bool = False) -> CampaignResult:
+    """Expand ``spec`` into jobs, run them, and collect/stream results."""
+    if executor not in EXECUTORS:
+        raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+    t0 = time.perf_counter()
+    spec.validate(provided=set(workloads or {}))
+    jobs = spec.expand()
+    texts = _workload_texts(spec, workloads)
+
+    cache = PersistentCache(cache_path) if cache_path else PersistentCache()
+    loaded = cache.loaded_entries
+
+    jsonl_path = None
+    jsonl_file = None
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        jsonl_path = os.path.join(out_dir, "results.jsonl")
+        jsonl_file = open(jsonl_path, "w")
+    jsonl_lock = threading.Lock()
+
+    def emit_row(row: dict) -> None:
+        if jsonl_file:
+            with jsonl_lock:
+                jsonl_file.write(json.dumps(row) + "\n")
+                jsonl_file.flush()
+        if progress:
+            tag = (f"{row['step_time_s'] * 1e3:9.3f} ms"
+                   if "step_time_s" in row else f"ERROR {row.get('error')}")
+            print(f"  [{row['job_id']:4d}/{len(jobs)}] "
+                  f"{row['workload']} × {row['system']} × "
+                  f"{row['estimator']} × {row['slicer']}: {tag}",
+                  flush=True)
+
+    rows: list[dict] = []
+    new_entry_count = 0
+    try:
+        if executor == "process":
+            rows, new_entry_count = _run_process_pool(
+                jobs, texts, cache, max_workers, emit_row)
+        else:
+            rows, new_entry_count = _run_in_process(
+                jobs, texts, cache, emit_row,
+                max_workers if executor == "thread" else 0)
+    finally:
+        if jsonl_file:
+            jsonl_file.close()
+
+    rows.sort(key=lambda r: r["job_id"])
+    if cache_path:
+        cache.save(cache_path)
+
+    total_hits = sum(r.get("cache_hits", 0) for r in rows)
+    total_misses = sum(r.get("cache_misses", 0) for r in rows)
+    wall = time.perf_counter() - t0
+    cache_report = {
+        "path": cache_path,
+        "loaded_entries": loaded,
+        "total_entries": len(cache),
+        "new_entries": new_entry_count,
+        "hits": total_hits,
+        "misses": total_misses,
+        "hit_rate": total_hits / (total_hits + total_misses)
+        if total_hits + total_misses else 0.0,
+    }
+    summary = summarize(spec.name, rows)
+    summary["wall_s"] = wall
+    summary["cache"] = cache_report
+
+    csv_path = summary_path = None
+    if out_dir:
+        csv_path = os.path.join(out_dir, "results.csv")
+        _write_csv(rows, csv_path)
+        summary_path = os.path.join(out_dir, "summary.json")
+        with open(summary_path, "w") as f:
+            json.dump(summary, f, indent=2)
+
+    return CampaignResult(
+        name=spec.name, rows=rows, summary=summary, jsonl_path=jsonl_path,
+        csv_path=csv_path, summary_path=summary_path, wall_s=wall,
+        cache=cache_report)
+
+
+def _run_in_process(jobs: list[JobSpec], texts: dict, cache: PersistentCache,
+                    emit_row, thread_workers: int) -> tuple[list[dict], int]:
+    """Serial or thread-pool execution over one shared live cache store."""
+    programs: dict = {}
+    lock = threading.Lock()
+    new_keys: set[str] = set()
+    rows: list[dict] = []
+    rows_lock = threading.Lock()
+
+    def run_one(job: JobSpec) -> None:
+        try:
+            row, new = _execute(job, texts, programs, cache, lock)
+            new_keys.update(new)
+        except Exception as e:  # noqa: BLE001 — keep the campaign going
+            row = dict(job.to_row())
+            row["error"] = f"{type(e).__name__}: {e}"
+        with rows_lock:
+            rows.append(row)
+        emit_row(row)
+
+    if thread_workers == 0:
+        for job in jobs:
+            run_one(job)
+    else:
+        with ThreadPoolExecutor(max_workers=thread_workers) as pool:
+            futures = [pool.submit(run_one, j) for j in jobs]
+            wait(futures)
+            for f in futures:
+                f.result()
+    return rows, len(new_keys)
+
+
+def _run_process_pool(jobs: list[JobSpec], texts: dict,
+                      cache: PersistentCache, max_workers: int | None,
+                      emit_row) -> tuple[list[dict], int]:
+    """Process-pool execution: snapshot cache out, merge fresh entries in."""
+    import multiprocessing
+    import sys
+
+    # prefer spawn: the parent may hold live jax threads and fork of a
+    # threaded process risks deadlock.  spawn re-imports __main__, which
+    # only works when __main__ is a real file (CLI, pytest, scripts) —
+    # fall back to fork for stdin/interactive parents.
+    main_mod = sys.modules.get("__main__")
+    method = ("spawn" if getattr(main_mod, "__file__", None)
+              and os.path.exists(getattr(main_mod, "__file__"))
+              else "fork")
+    rows: list[dict] = []
+    new_total = 0
+    with ProcessPoolExecutor(
+            max_workers=max_workers, initializer=_worker_init,
+            initargs=(texts, dict(cache.entries)),
+            mp_context=multiprocessing.get_context(method)) as pool:
+        pending = {pool.submit(_worker_run, j): j for j in jobs}
+        while pending:
+            done, _ = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                job = pending.pop(fut)
+                try:
+                    row, new = fut.result()
+                    new_total += cache.merge(new)
+                except Exception as e:  # noqa: BLE001
+                    row = dict(job.to_row())
+                    row["error"] = f"{type(e).__name__}: {e}"
+                rows.append(row)
+                emit_row(row)
+    return rows, new_total
+
+
+def _write_csv(rows: list[dict], path: str) -> None:
+    fields: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in fields:
+                fields.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def load_jsonl(path: str) -> list[dict]:
+    """Read back a streamed results file."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -1,0 +1,239 @@
+"""Declarative campaign grids and their expansion into prediction jobs.
+
+A :class:`CampaignSpec` is a small JSON-able description of a sweep; every
+axis is a list and the grid is the cross product.  Expansion produces
+:class:`JobSpec` records made only of primitives, so they pickle cleanly
+into worker processes and serialize verbatim into result rows.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """One workload axis entry.  Exactly one source must be given:
+
+    * ``stablehlo_path`` / ``hlo_path`` — pre-exported IR text on disk;
+    * ``arch`` (+ ``seq``/``batch``/``mode``) — export via jax from a
+      registered model config (requires jax at campaign-build time).
+
+    ``fidelity`` is the *default* program fidelity for this workload; an
+    :class:`EstimatorSpec` may override it (the paper's estimator classes
+    consume different IR stages: analytical -> optimized, profiling -> raw).
+    """
+    name: str
+    stablehlo_path: str | None = None
+    hlo_path: str | None = None
+    arch: str | None = None
+    seq: int = 512
+    batch: int = 4
+    mode: str = "forward"            # "forward" | "train"
+    fidelity: str | None = None      # default: optimized if available
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadSpec":
+        return cls(**d)
+
+    def validate(self) -> None:
+        sources = [self.stablehlo_path, self.hlo_path, self.arch]
+        if not any(sources):
+            raise ValueError(
+                f"workload {self.name!r}: need stablehlo_path, hlo_path, "
+                "or arch")
+
+
+@dataclass(frozen=True)
+class EstimatorSpec:
+    """One estimator axis entry.
+
+    kinds: ``roofline`` (options: mode, include_overheads), ``systolic``
+    (options: preset), ``mixed`` (systolic primary + roofline fallback;
+    options: preset), ``profiling`` (host execution, roofline-projected
+    onto the grid system; options: runs).
+    """
+    kind: str = "roofline"
+    options: tuple = ()              # sorted (key, value) pairs — hashable
+    fidelity: str | None = None      # override workload fidelity
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EstimatorSpec":
+        d = dict(d)
+        opts = d.pop("options", {}) or {}
+        return cls(options=tuple(sorted(opts.items())), **d)
+
+    @property
+    def options_dict(self) -> dict:
+        return dict(self.options)
+
+    @property
+    def label(self) -> str:
+        """Unique within any well-formed estimator axis: every field that
+        distinguishes two entries appears (summaries and consumer index
+        dicts key rows on this)."""
+        opts = self.options_dict
+        bits = [self.kind]
+        if opts.get("mode"):
+            bits.append(str(opts["mode"]))
+        if opts.get("include_overheads"):
+            bits.append("ovh")
+        if opts.get("preset"):
+            bits.append(str(opts["preset"]))
+        if opts.get("runs"):
+            bits.append(f"runs{opts['runs']}")
+        label = "-".join(bits)
+        if self.fidelity:
+            label += f"@{self.fidelity}"
+        return label
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """One topology axis entry.
+
+    ``auto`` derives the topology family from the grid system's
+    interconnect record (all-to-all node for GPUs, torus for TPUs), which
+    is what keeps a single grid meaningful across architectures.
+    Explicit kinds: ``a2a``, ``dragonfly``, ``torus``, ``multipod``.
+    """
+    kind: str = "auto"
+    params: tuple = ()               # sorted (key, value) pairs
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TopologySpec":
+        d = dict(d)
+        params = d.pop("params", {}) or {}
+        for k, v in list(params.items()):
+            if isinstance(v, list):
+                params[k] = tuple(v)
+        return cls(params=tuple(sorted(params.items())), **d)
+
+    @property
+    def params_dict(self) -> dict:
+        return dict(self.params)
+
+    @property
+    def label(self) -> str:
+        n = self.params_dict.get("num_devices")
+        return f"{self.kind}{n}" if n else self.kind
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One fully expanded grid point — primitives only, picklable."""
+    job_id: int
+    workload: str
+    fidelity: str
+    system: str
+    estimator: EstimatorSpec
+    slicer: str
+    topology: TopologySpec
+    overlap: bool = False
+    straggler_factor: float = 1.0
+    compression: float = 1.0
+
+    def to_row(self) -> dict:
+        return {
+            "job_id": self.job_id,
+            "workload": self.workload,
+            "fidelity": self.fidelity,
+            "system": self.system,
+            "estimator": self.estimator.label,
+            "slicer": self.slicer,
+            "topology": self.topology.label,
+            "overlap": self.overlap,
+            "straggler_factor": self.straggler_factor,
+            "compression": self.compression,
+        }
+
+
+@dataclass
+class CampaignSpec:
+    """The declarative grid.  Every axis is a list; grid = cross product."""
+    name: str = "campaign"
+    workloads: list[WorkloadSpec] = field(default_factory=list)
+    systems: list[str] = field(default_factory=lambda: ["a100"])
+    estimators: list[EstimatorSpec] = field(
+        default_factory=lambda: [EstimatorSpec()])
+    slicers: list[str] = field(default_factory=lambda: ["linear"])
+    topologies: list[TopologySpec] = field(
+        default_factory=lambda: [TopologySpec()])
+    overlap: list[bool] = field(default_factory=lambda: [False])
+    straggler_factor: list[float] = field(default_factory=lambda: [1.0])
+    compression: list[float] = field(default_factory=lambda: [1.0])
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CampaignSpec":
+        d = dict(d)
+        known = {f for f in cls.__dataclass_fields__}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown campaign spec keys: {sorted(unknown)}")
+        spec = cls(
+            name=d.get("name", "campaign"),
+            workloads=[WorkloadSpec.from_dict(w)
+                       for w in d.get("workloads", [])],
+            systems=list(d.get("systems", ["a100"])),
+            estimators=[EstimatorSpec.from_dict(e)
+                        for e in d.get("estimators", [{}])],
+            slicers=list(d.get("slicers", ["linear"])),
+            topologies=[TopologySpec.from_dict(t)
+                        for t in d.get("topologies", [{}])],
+            overlap=[bool(o) for o in d.get("overlap", [False])],
+            straggler_factor=[float(s)
+                              for s in d.get("straggler_factor", [1.0])],
+            compression=[float(c) for c in d.get("compression", [1.0])],
+        )
+        spec.validate()
+        return spec
+
+    @classmethod
+    def from_json(cls, path: str) -> "CampaignSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        for e in d["estimators"]:
+            e["options"] = dict(e["options"])
+        for t in d["topologies"]:
+            t["params"] = dict(t["params"])
+        return d
+
+    def validate(self, provided: set[str] | frozenset = frozenset()) -> None:
+        """``provided``: workload names supplied in-memory to the runner —
+        those need no on-disk/arch source in the spec."""
+        if not self.workloads:
+            raise ValueError("campaign spec: at least one workload required")
+        for w in self.workloads:
+            if w.name not in provided:
+                w.validate()
+        for axis in ("systems", "estimators", "slicers", "topologies",
+                     "overlap", "straggler_factor", "compression"):
+            if not getattr(self, axis):
+                raise ValueError(f"campaign spec: axis {axis!r} is empty")
+
+    @property
+    def num_points(self) -> int:
+        return (len(self.workloads) * len(self.systems)
+                * len(self.estimators) * len(self.slicers)
+                * len(self.topologies) * len(self.overlap)
+                * len(self.straggler_factor) * len(self.compression))
+
+    def expand(self) -> list[JobSpec]:
+        """Cross product of all axes, in deterministic axis order."""
+        jobs: list[JobSpec] = []
+        grid = itertools.product(
+            self.workloads, self.systems, self.estimators, self.slicers,
+            self.topologies, self.overlap, self.straggler_factor,
+            self.compression)
+        for i, (w, system, est, slicer, topo, ovl, strag, comp) in \
+                enumerate(grid):
+            fidelity = est.fidelity or w.fidelity or "optimized"
+            jobs.append(JobSpec(
+                job_id=i, workload=w.name, fidelity=fidelity,
+                system=system, estimator=est, slicer=slicer, topology=topo,
+                overlap=ovl, straggler_factor=strag, compression=comp))
+        return jobs

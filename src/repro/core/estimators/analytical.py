@@ -27,6 +27,10 @@ class RooflineEstimator(ComputeEstimator):
         self.mode = mode
         self.include_overheads = include_overheads
 
+    @property
+    def cache_config_key(self) -> str:
+        return self.mode + ("+ovh" if self.include_overheads else "")
+
     def _dtype_of(self, region: ComputeRegion) -> str:
         # dominant dtype by output bytes across matmul-ish ops, else first op
         best, best_bytes = "bf16", -1.0

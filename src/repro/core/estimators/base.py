@@ -49,6 +49,16 @@ class ComputeEstimator(abc.ABC):
     def cache_hw_key(self) -> str:
         return self.system.name
 
+    @property
+    def cache_config_key(self) -> str:
+        """Estimator configuration that can change the latency value.
+
+        Folded into the cache key alongside (H, C, R): two differently
+        configured instances of the same estimator class (e.g. roofline
+        region vs per-op mode) must not serve each other's entries when
+        they share one store."""
+        return ""
+
 
 class MixedEstimator(ComputeEstimator):
     """Primary estimator + fallback for unsupported regions (paper §III-B(c))."""
@@ -66,3 +76,7 @@ class MixedEstimator(ComputeEstimator):
 
     def supports(self, region: ComputeRegion) -> bool:
         return True
+
+    @property
+    def cache_config_key(self) -> str:
+        return f"{self.primary.cache_config_key}+{self.fallback.cache_config_key}"

@@ -5,16 +5,35 @@ changing any of the three can change latency, nothing else can.  Stacked
 transformer blocks produce identical region fingerprints, so an L-layer
 model pays for one evaluation per distinct block — the mechanism behind
 the paper's 89.7 % (Llama-3) / 26.8 % (ResNet) evaluation-time savings.
+
+Two layers:
+
+  * :class:`CachedEstimator` — the in-run memo wrapping any estimator.
+  * :class:`PersistentCache`  — an on-disk store of the same keyed entries
+    that campaigns, benchmarks, and repeated runs share across processes,
+    extending the within-run savings to across-run savings.
+
+The on-disk format is versioned: ``SCHEMA_VERSION`` guards the file layout
+and ``FINGERPRINT_VERSION`` guards the region-fingerprint algorithm (the R
+of the key).  Bumping either invalidates stale files on load instead of
+silently serving latencies keyed by an incompatible fingerprint.
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
 import threading
 from dataclasses import dataclass, field
+from typing import MutableMapping
 
 from ..slicing.regions import ComputeRegion
 from .base import ComputeEstimator
+
+#: bump when the on-disk JSON layout changes
+SCHEMA_VERSION = 1
+#: bump when slicing.regions.region_fingerprint changes what it hashes
+FINGERPRINT_VERSION = 1
 
 
 @dataclass
@@ -37,25 +56,124 @@ class CacheStats:
         return self.saved_seconds / would_be if would_be > 0 else 0.0
 
 
+class PersistentCache:
+    """On-disk (H, C, R) -> seconds store shared across runs and processes.
+
+    Thread-safe for concurrent readers/writers within one process; across
+    processes, workers return their freshly computed entries and the owning
+    process merges + saves (last-writer-wins on identical keys is harmless
+    because entries are deterministic per key for a given estimator).
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.entries: dict[str, float] = {}
+        self.loaded_entries = 0
+        self._lock = threading.Lock()
+        if path:
+            self.load(path)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+    def __getitem__(self, key: str) -> float:
+        return self.entries[key]
+
+    def __setitem__(self, key: str, value: float) -> None:
+        with self._lock:
+            self.entries[key] = value
+
+    def get(self, key: str, default=None):
+        return self.entries.get(key, default)
+
+    def load(self, path: str) -> int:
+        """Load a cache file; stale/foreign files are discarded, not errors."""
+        self.path = path
+        if not os.path.exists(path):
+            return 0
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            return 0
+        if not isinstance(data, dict):
+            return 0
+        if (data.get("schema") != SCHEMA_VERSION
+                or data.get("fingerprint") != FINGERPRINT_VERSION):
+            return 0  # versioned invalidation: stale layout or algorithm
+        entries = data.get("entries")
+        if not isinstance(entries, dict):
+            return 0
+        with self._lock:
+            self.entries.update({str(k): float(v)
+                                 for k, v in entries.items()})
+            self.loaded_entries = len(entries)
+        return self.loaded_entries
+
+    def merge(self, entries: MutableMapping[str, float]) -> int:
+        """Fold in entries computed elsewhere; returns #new keys."""
+        with self._lock:
+            new = sum(1 for k in entries if k not in self.entries)
+            self.entries.update(entries)
+        return new
+
+    def save(self, path: str | None = None) -> str:
+        """Atomic write (tmp + rename) so concurrent readers never see a
+        torn file."""
+        path = path or self.path
+        if not path:
+            raise ValueError("PersistentCache.save: no path configured")
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with self._lock:
+            payload = {"schema": SCHEMA_VERSION,
+                       "fingerprint": FINGERPRINT_VERSION,
+                       "entries": dict(self.entries)}
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".cache-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+
 class CachedEstimator(ComputeEstimator):
+    """Memoizing wrapper; optionally backed by a shared/persistent store.
+
+    ``store`` may be a plain dict shared between several CachedEstimator
+    instances (the campaign runner's in-process mode) or a
+    :class:`PersistentCache` (cross-run mode).  ``new_entries`` records the
+    keys this instance computed itself, so a parallel worker can ship only
+    its fresh results back to the coordinating process.
+    """
+
     def __init__(self, inner: ComputeEstimator,
-                 persist_path: str | None = None):
+                 persist_path: str | None = None,
+                 store: MutableMapping[str, float] | PersistentCache | None = None):
         super().__init__(inner.system)
         self.inner = inner
         self.toolchain = inner.toolchain
         self.persist_path = persist_path
         self.stats = CacheStats()
         self._lock = threading.Lock()
-        self._mem: dict[str, float] = {}
-        if persist_path and os.path.exists(persist_path):
-            try:
-                with open(persist_path) as f:
-                    self._mem = json.load(f)
-            except (json.JSONDecodeError, OSError):
-                self._mem = {}
+        self.new_entries: dict[str, float] = {}
+        if store is not None:
+            self._mem = store
+        elif persist_path:
+            self._mem = PersistentCache(persist_path)
+        else:
+            self._mem = {}
 
     def _key(self, region: ComputeRegion) -> str:
-        return f"{self.inner.cache_hw_key}|{self.inner.toolchain}|{region.fingerprint}"
+        return (f"{self.inner.cache_hw_key}|{self.inner.toolchain}"
+                f"|{self.inner.cache_config_key}|{region.fingerprint}")
 
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         import time
@@ -70,6 +188,7 @@ class CachedEstimator(ComputeEstimator):
         dt = time.perf_counter() - t0
         with self._lock:
             self._mem[key] = value
+            self.new_entries[key] = value
             self.stats.misses += 1
             self.stats.miss_cost_seconds += dt
             self.stats.per_key_cost[key] = dt
@@ -79,8 +198,11 @@ class CachedEstimator(ComputeEstimator):
         return self.inner.supports(region)
 
     def flush(self) -> None:
-        if self.persist_path:
-            os.makedirs(os.path.dirname(self.persist_path) or ".",
-                        exist_ok=True)
-            with open(self.persist_path, "w") as f:
-                json.dump(self._mem, f)
+        if not self.persist_path:
+            return
+        if isinstance(self._mem, PersistentCache):
+            self._mem.save(self.persist_path)
+        else:
+            pc = PersistentCache()
+            pc.merge(self._mem)
+            pc.save(self.persist_path)

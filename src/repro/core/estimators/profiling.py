@@ -87,13 +87,19 @@ class ProfilingEstimator(ComputeEstimator):
         from jax._src import compiler
         from jax._src.interpreters import mlir as jmlir
         from jax._src.lib.mlir import ir
-        from jaxlib._jax import DeviceList
         backend = self._get_backend()
         with jmlir.make_ir_context():
             module = ir.Module.parse(module_text)
         opts = compiler.get_compile_options(num_replicas=1, num_partitions=1)
-        dl = DeviceList(tuple(backend.devices()[:1]))
-        return compiler.backend_compile_and_load(backend, module, dl, opts, [])
+        if hasattr(compiler, "backend_compile_and_load"):  # jax >= 0.6
+            try:
+                from jaxlib._jax import DeviceList
+            except ImportError:
+                from jaxlib.xla_extension import DeviceList
+            dl = DeviceList(tuple(backend.devices()[:1]))
+            return compiler.backend_compile_and_load(
+                backend, module, dl, opts, [])
+        return compiler.backend_compile(backend, module, opts, [])
 
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         if self.program is None:
@@ -144,3 +150,7 @@ class ProfilingEstimator(ComputeEstimator):
     def cache_hw_key(self) -> str:
         tgt = self.target_system.name if self.target_system else "native"
         return f"{self.system.name}->{tgt}"
+
+    @property
+    def cache_config_key(self) -> str:
+        return f"runs{self.runs}"

@@ -53,7 +53,11 @@ def export_workload(jitted, *specs, name: str = "workload",
         compiled = lowered.compile()
         w.hlo_text = compiled.as_text()
         try:
-            w.meta["cost_analysis"] = dict(compiled.cost_analysis() or {})
+            ca = compiled.cost_analysis()
+            # jax <= 0.4.x returns a one-element list of dicts
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            w.meta["cost_analysis"] = dict(ca or {})
         except Exception:
             pass
         try:
@@ -86,6 +90,27 @@ class Prediction:
     cache_stats: CacheStats | None = None
     schedule: ScheduleResult | None = None
     breakdown: dict = field(default_factory=dict)
+
+    def to_row(self) -> dict:
+        """Flat, JSON/CSV-serializable view (drops the schedule object)."""
+        row = {
+            "workload": self.workload,
+            "system": self.system,
+            "estimator": self.estimator,
+            "slicer": self.slicer,
+            "step_time_s": self.step_time_s,
+            "compute_s": self.compute_s,
+            "comm_s": self.comm_s,
+            "exposed_comm_s": self.exposed_comm_s,
+            "num_segments": self.num_segments,
+            "num_comm": self.num_comm,
+            "simulation_wall_s": self.simulation_wall_s,
+        }
+        if self.cache_stats is not None:
+            row["cache_hits"] = self.cache_stats.hits
+            row["cache_misses"] = self.cache_stats.misses
+            row["cache_hit_rate"] = self.cache_stats.hit_rate
+        return row
 
 
 def _trace_from_linear(segments: list[Segment], durations: list[float],
@@ -142,46 +167,83 @@ def _trace_from_dep(segments: list[Segment], deps: dict[int, set[int]],
     return trace
 
 
+@dataclass
+class PredictionJob:
+    """One (program × estimator × topology × knobs) prediction, reified.
+
+    This is the unit the campaign engine schedules: constructing the job is
+    cheap and side-effect free; :meth:`run` executes stages (b)-(d) of the
+    methodology.  ``cache_store`` lets many jobs (and many estimators —
+    the (H, C, config, R) key disambiguates, including estimator
+    configuration) share one latency store, in-process or persistent;
+    ``cached`` exposes the wrapper after the run so callers can collect
+    ``new_entries`` for cross-process merging.
+    """
+    program: Program
+    estimator: ComputeEstimator
+    topology: Topology
+    slicer: str = "linear"
+    overlap: bool = False
+    straggler_factor: float = 1.0
+    compression: float = 1.0
+    name: str = "workload"
+    use_cache: bool = True
+    system_name: str | None = None
+    cache_store: object | None = None   # MutableMapping | PersistentCache
+    cached: CachedEstimator | None = field(default=None, init=False)
+
+    def run(self) -> Prediction:
+        t0 = time.perf_counter()
+        self.cached = (CachedEstimator(self.estimator, store=self.cache_store)
+                       if self.use_cache else None)
+        est = self.cached or self.estimator
+
+        if self.slicer == "linear":
+            segments = linear_split(self.program)
+            durations = [est.get_run_time_estimate(s.region)
+                         if s.kind == "COMP" else 0.0 for s in segments]
+            trace = _trace_from_linear(segments, durations, self.name)
+        elif self.slicer in ("dep", "dependency-aware"):
+            segments, dep_map = dependency_aware_split(self.program)
+            durations = [est.get_run_time_estimate(s.region)
+                         if s.kind == "COMP" else 0.0 for s in segments]
+            trace = _trace_from_dep(segments, dep_map, durations, self.name)
+        else:
+            raise ValueError(f"unknown slicer {self.slicer!r}")
+
+        trace.validate()
+        sched = simulate(trace, self.topology, overlap=self.overlap,
+                         straggler_factor=self.straggler_factor,
+                         compression=self.compression)
+        wall = time.perf_counter() - t0
+        return Prediction(
+            workload=self.name,
+            system=self.system_name or self.estimator.system.name,
+            estimator=self.estimator.toolchain,
+            slicer=self.slicer,
+            step_time_s=sched.makespan_s,
+            compute_s=sched.compute_busy_s,
+            comm_s=sched.comm_busy_s,
+            exposed_comm_s=sched.exposed_comm_s,
+            num_segments=len(segments),
+            num_comm=sum(1 for s in segments if s.kind == "COMM"),
+            simulation_wall_s=wall,
+            cache_stats=self.cached.stats if self.cached else None,
+            schedule=sched,
+            breakdown=sched.breakdown)
+
+
 def predict(program: Program, estimator: ComputeEstimator, topology: Topology,
             *, slicer: str = "linear", overlap: bool = False,
             straggler_factor: float = 1.0, compression: float = 1.0,
             name: str = "workload", use_cache: bool = True,
-            system_name: str | None = None) -> Prediction:
-    """Run stages (b)-(d) of the methodology on a parsed program."""
-    t0 = time.perf_counter()
-    cached = CachedEstimator(estimator) if use_cache else None
-    est = cached or estimator
+            system_name: str | None = None,
+            cache_store: object | None = None) -> Prediction:
+    """Run stages (b)-(d) of the methodology on a parsed program.
 
-    if slicer == "linear":
-        segments = linear_split(program)
-        durations = [est.get_run_time_estimate(s.region)
-                     if s.kind == "COMP" else 0.0 for s in segments]
-        trace = _trace_from_linear(segments, durations, name)
-    elif slicer in ("dep", "dependency-aware"):
-        segments, dep_map = dependency_aware_split(program)
-        durations = [est.get_run_time_estimate(s.region)
-                     if s.kind == "COMP" else 0.0 for s in segments]
-        trace = _trace_from_dep(segments, dep_map, durations, name)
-    else:
-        raise ValueError(f"unknown slicer {slicer!r}")
-
-    trace.validate()
-    sched = simulate(trace, topology, overlap=overlap,
-                     straggler_factor=straggler_factor,
-                     compression=compression)
-    wall = time.perf_counter() - t0
-    return Prediction(
-        workload=name,
-        system=system_name or estimator.system.name,
-        estimator=estimator.toolchain,
-        slicer=slicer,
-        step_time_s=sched.makespan_s,
-        compute_s=sched.compute_busy_s,
-        comm_s=sched.comm_busy_s,
-        exposed_comm_s=sched.exposed_comm_s,
-        num_segments=len(segments),
-        num_comm=sum(1 for s in segments if s.kind == "COMM"),
-        simulation_wall_s=wall,
-        cache_stats=cached.stats if cached else None,
-        schedule=sched,
-        breakdown=sched.breakdown)
+    Thin wrapper over :class:`PredictionJob` for the single-point case."""
+    return PredictionJob(
+        program=program, estimator=estimator, topology=topology,
+        slicer=slicer, overlap=overlap, straggler_factor=straggler_factor,
+        compression=compression, name=name, use_cache=use_cache,
+        system_name=system_name, cache_store=cache_store).run()

@@ -11,6 +11,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from .common import barrier
 from .params import ParamSpec
 
 _STAGES = {
@@ -131,7 +132,7 @@ def resnet_forward(cfg: ResNetConfig, params: dict, images: jax.Array,
                                blk["proj_bn"])
             x = jax.nn.relu(y + identity)
             if cfg.block_barriers:
-                x = jax.lax.optimization_barrier(x)
+                x = barrier(x)
     x = x.mean(axis=(1, 2))
     logits = (x.astype(jnp.float32)
               @ params["head"].astype(jnp.float32))

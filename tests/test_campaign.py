@@ -1,0 +1,290 @@
+"""Campaign engine: grid expansion, executor equivalence, output
+round-trips, the CLI, and cross-run persistent-cache reuse."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.campaign import CampaignSpec, run_campaign
+from repro.campaign.runner import load_jsonl
+from repro.campaign.spec import EstimatorSpec, TopologySpec, WorkloadSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------ grid expansion -----------------------------
+
+
+def _spec_dict(**overrides):
+    d = {
+        "name": "t",
+        "workloads": [{"name": "toy", "stablehlo_path": "unused.mlir"}],
+        "systems": ["a100", "h100"],
+        "estimators": [{"kind": "roofline"},
+                       {"kind": "roofline", "fidelity": "raw",
+                        "options": {"mode": "per-op",
+                                    "include_overheads": True}}],
+        "slicers": ["linear", "dep"],
+    }
+    d.update(overrides)
+    return d
+
+
+class TestGridExpansion:
+    def test_cross_product_size_and_ids(self):
+        spec = CampaignSpec.from_dict(_spec_dict())
+        jobs = spec.expand()
+        assert spec.num_points == len(jobs) == 2 * 2 * 2
+        assert [j.job_id for j in jobs] == list(range(8))
+
+    def test_axis_order_deterministic(self):
+        spec = CampaignSpec.from_dict(_spec_dict())
+        a = [j.to_row() for j in spec.expand()]
+        b = [j.to_row() for j in spec.expand()]
+        assert a == b
+
+    def test_estimator_fidelity_overrides_workload(self):
+        spec = CampaignSpec.from_dict(_spec_dict())
+        fids = {(j.estimator.label, j.fidelity) for j in spec.expand()}
+        assert ("roofline", "optimized") in fids
+        assert ("roofline-per-op-ovh@raw", "raw") in fids
+
+    def test_knob_axes_expand(self):
+        spec = CampaignSpec.from_dict(_spec_dict(
+            overlap=[False, True], straggler_factor=[1.0, 2.0]))
+        assert spec.num_points == 8 * 4
+        stragglers = {j.straggler_factor for j in spec.expand()}
+        assert stragglers == {1.0, 2.0}
+
+    def test_unknown_keys_rejected(self):
+        with pytest.raises(ValueError, match="unknown campaign spec keys"):
+            CampaignSpec.from_dict(_spec_dict(typo_axis=[1]))
+
+    def test_workload_needs_a_source(self):
+        with pytest.raises(ValueError, match="need stablehlo_path"):
+            CampaignSpec.from_dict(_spec_dict(workloads=[{"name": "x"}]))
+
+    def test_specs_are_picklable_primitives(self):
+        import pickle
+        spec = CampaignSpec.from_dict(_spec_dict())
+        for job in spec.expand():
+            assert pickle.loads(pickle.dumps(job)) == job
+
+    def test_roundtrip_through_json(self, tmp_path):
+        spec = CampaignSpec.from_dict(_spec_dict())
+        p = tmp_path / "spec.json"
+        p.write_text(json.dumps(spec.to_dict()))
+        spec2 = CampaignSpec.from_json(str(p))
+        assert spec2.expand() == spec.expand()
+
+
+# ------------------------- execution (shared fixture) ----------------------
+
+
+@pytest.fixture(scope="module")
+def toy_workload():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pipeline import export_workload
+
+    def f(w, x):
+        for i in range(6):
+            x = jax.lax.optimization_barrier(jnp.tanh(x @ w[i]))
+        return x
+    w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    return export_workload(jax.jit(f), w, x, name="toy",
+                           compile_workload=False)
+
+
+def _run(spec_dict, workload, **kw):
+    spec = CampaignSpec.from_dict(spec_dict)
+    return run_campaign(spec, workloads={"toy": workload}, **kw)
+
+
+class TestExecution:
+    def test_serial_thread_process_agree(self, toy_workload):
+        d = _spec_dict()
+        d["estimators"] = [{"kind": "roofline"}]  # raw fidelity needs no hlo
+        d["workloads"][0]["fidelity"] = "raw"
+        results = {ex: _run(d, toy_workload, executor=ex)
+                   for ex in ("serial", "thread", "process")}
+        times = {ex: {r["job_id"]: r["step_time_s"] for r in res.ok_rows}
+                 for ex, res in results.items()}
+        assert results["serial"].summary["num_failed"] == 0
+        assert times["serial"] == times["thread"] == times["process"]
+
+    def test_failed_job_reported_not_fatal(self, toy_workload):
+        d = _spec_dict(systems=["a100", "no-such-system"])
+        d["workloads"][0]["fidelity"] = "raw"
+        res = _run(d, toy_workload, executor="serial")
+        assert res.summary["num_failed"] == res.summary["num_ok"] > 0
+        assert all("error" in r for r in res.rows
+                   if r["system"] == "no-such-system")
+
+    def test_jsonl_csv_roundtrip(self, toy_workload, tmp_path):
+        d = _spec_dict()
+        d["workloads"][0]["fidelity"] = "raw"
+        res = _run(d, toy_workload, executor="serial", out_dir=str(tmp_path))
+        streamed = load_jsonl(res.jsonl_path)
+        assert sorted(r["job_id"] for r in streamed) == list(range(8))
+        assert {json.dumps(r, sort_keys=True) for r in streamed} \
+            == {json.dumps(r, sort_keys=True) for r in res.rows}
+        import csv
+        with open(res.csv_path) as f:
+            csv_rows = list(csv.DictReader(f))
+        assert len(csv_rows) == 8
+        assert float(csv_rows[0]["step_time_s"]) == pytest.approx(
+            res.rows[0]["step_time_s"])
+        summary = json.loads((tmp_path / "summary.json").read_text())
+        assert summary["num_ok"] == 8
+        assert "system_ranks" in summary and "rank_agreement" in summary
+
+    def test_estimator_variants_do_not_collide_in_shared_store(
+            self, toy_workload):
+        # both estimators cost the SAME raw program while sharing one
+        # cache store — config must be part of the (H,C,R) key or the
+        # second variant would serve the first's latencies
+        d = _spec_dict(systems=["a100"], slicers=["linear"])
+        d["workloads"][0]["fidelity"] = "raw"
+        d["estimators"] = [{"kind": "roofline"},
+                           {"kind": "roofline",
+                            "options": {"mode": "per-op",
+                                        "include_overheads": True}}]
+        res = _run(d, toy_workload, executor="serial")
+        t = {r["estimator"]: r["step_time_s"] for r in res.ok_rows}
+        assert t["roofline"] != t["roofline-per-op-ovh"]
+
+    def test_row_reports_effective_fidelity(self, toy_workload):
+        # toy workload has no optimized HLO: the default 'optimized'
+        # request falls back to raw, and rows must say so
+        d = _spec_dict(systems=["a100"], slicers=["linear"])
+        d["estimators"] = [{"kind": "roofline"}]
+        res = _run(d, toy_workload, executor="serial")
+        assert all(r["fidelity"] == "raw" for r in res.ok_rows)
+
+    def test_summary_ranks_match_rows(self, toy_workload):
+        d = _spec_dict(slicers=["linear"])
+        d["estimators"] = [{"kind": "roofline"}]
+        d["workloads"][0]["fidelity"] = "raw"
+        res = _run(d, toy_workload, executor="serial")
+        by_sys = {r["system"]: r["step_time_s"] for r in res.ok_rows}
+        expected = sorted(by_sys, key=by_sys.get)
+        assert res.summary["system_ranks"]["toy"]["roofline"] == expected
+
+
+# --------------------------- persistent (H,C,R) cache ----------------------
+
+
+class TestPersistentCache:
+    def test_second_run_hits_and_is_faster(self, toy_workload, tmp_path):
+        """The across-run extension of the paper's §III-B(c) caching
+        result: an identical campaign against a warm cache re-pays zero
+        estimator cost."""
+        d = _spec_dict(systems=["a100", "h100"], slicers=["linear", "dep"])
+        # profiling (host-executed, runs=1) makes estimator cost real, so
+        # the wall-time drop is measurable, not noise
+        d["estimators"] = [{"kind": "profiling", "fidelity": "raw",
+                            "options": {"runs": 1}}]
+        cache = str(tmp_path / "hcr.json")
+        r1 = _run(d, toy_workload, executor="serial", cache_path=cache)
+        assert r1.summary["num_failed"] == 0
+        assert r1.cache["misses"] > 0 and r1.cache["new_entries"] > 0
+        assert os.path.exists(cache)
+
+        r2 = _run(d, toy_workload, executor="serial", cache_path=cache)
+        assert r2.summary["num_failed"] == 0
+        assert r2.cache["loaded_entries"] == r1.cache["new_entries"]
+        assert r2.cache["hits"] > 0
+        assert r2.cache["misses"] == 0
+        assert r2.cache["hit_rate"] == 1.0
+        assert r2.wall_s < r1.wall_s
+        # identical predictions from cached latencies
+        t1 = {r["job_id"]: r["step_time_s"] for r in r1.ok_rows}
+        t2 = {r["job_id"]: r["step_time_s"] for r in r2.ok_rows}
+        assert t1 == t2
+
+    def test_version_mismatch_invalidates(self, tmp_path):
+        from repro.core.estimators.cache import PersistentCache
+        path = str(tmp_path / "hcr.json")
+        pc = PersistentCache()
+        pc.merge({"a100|roofline|deadbeef": 1.5})
+        pc.save(path)
+        data = json.loads(open(path).read())
+        data["fingerprint"] = -1
+        with open(path, "w") as f:
+            json.dump(data, f)
+        stale = PersistentCache(path)
+        assert len(stale) == 0 and stale.loaded_entries == 0
+
+    def test_legacy_unversioned_file_discarded(self, tmp_path):
+        from repro.core.estimators.cache import PersistentCache
+        path = str(tmp_path / "hcr.json")
+        with open(path, "w") as f:
+            json.dump({"a100|roofline|deadbeef": 1.5}, f)
+        assert len(PersistentCache(path)) == 0
+
+
+# ----------------------------------- CLI -----------------------------------
+
+
+class TestCLI:
+    def test_cli_campaign_with_warm_rerun(self, toy_workload, tmp_path):
+        """Acceptance path: >= 12 grid points through `python -m
+        repro.campaign`, JSONL + CSV out, persistent hits on rerun."""
+        ir_path = tmp_path / "toy.mlir"
+        ir_path.write_text(toy_workload.stablehlo_text)
+        spec = {
+            "name": "cli",
+            "workloads": [{"name": "toy", "fidelity": "raw",
+                           "stablehlo_path": str(ir_path)}],
+            "systems": ["a100", "h100", "b200"],
+            "estimators": [{"kind": "roofline"},
+                           {"kind": "roofline",
+                            "options": {"mode": "per-op"}}],
+            "slicers": ["linear", "dep"],
+        }
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps(spec))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        cmd = [sys.executable, "-m", "repro.campaign", str(spec_path),
+               "--out", str(tmp_path / "out"), "--executor", "serial",
+               "--cache", str(tmp_path / "hcr.json"), "--quiet"]
+
+        p1 = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                            text=True, timeout=300)
+        assert p1.returncode == 0, p1.stdout[-2000:] + p1.stderr[-2000:]
+        rows = load_jsonl(str(tmp_path / "out" / "results.jsonl"))
+        assert len(rows) == 12  # 1 workload × 3 systems × 2 est × 2 slicers
+        assert os.path.exists(tmp_path / "out" / "results.csv")
+        s1 = json.loads((tmp_path / "out" / "summary.json").read_text())
+        assert s1["num_ok"] == 12
+        assert s1["cache"]["new_entries"] > 0
+
+        p2 = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                            text=True, timeout=300)
+        assert p2.returncode == 0, p2.stdout[-2000:] + p2.stderr[-2000:]
+        s2 = json.loads((tmp_path / "out" / "summary.json").read_text())
+        assert s2["cache"]["loaded_entries"] > 0
+        assert s2["cache"]["hits"] > 0 and s2["cache"]["misses"] == 0
+        assert "hits" in p2.stdout  # the CLI reports the cache line
+
+    def test_cli_dry_run(self, toy_workload, tmp_path):
+        ir_path = tmp_path / "toy.mlir"
+        ir_path.write_text(toy_workload.stablehlo_text)
+        spec = _spec_dict()
+        spec["workloads"][0]["stablehlo_path"] = str(ir_path)
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps(spec))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.campaign", str(spec_path),
+             "--dry-run"],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+        assert p.returncode == 0, p.stdout + p.stderr
+        assert "8 grid points" in p.stdout

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need the hypothesis dev dependency "
+           "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.estimators import (CachedEstimator, MixedEstimator, PRESETS,
                                    ProfilingEstimator, RooflineEstimator,

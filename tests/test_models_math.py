@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need the hypothesis dev dependency "
+           "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.attention import (AttnArgs, _chunked_attention,
                                     _dense_attention)

@@ -1,7 +1,12 @@
 """Collective cost models + event-driven scheduler, incl. hypothesis
 property tests on scheduler invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need the hypothesis dev dependency "
+           "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.ir.collectives import CommSpec
 from repro.core.network import (AllToAllNode, Dragonfly, MultiPod, Torus,
