@@ -43,8 +43,7 @@ def build_llama_step(arch: str, seq: int, batch: int, mesh,
     from repro.distributed.sharding import ShardingRules
     from repro.models import get_config, input_specs, model_specs
     from repro.models.params import abstract_params, init_params
-    from repro.models.transformer import forward
-    from repro.train.loop import make_train_step
+    from repro.train.loop import train_step_exports
     from repro.train.optimizer import OptimizerConfig, make_optimizer
 
     cfg = get_config(arch)
@@ -53,13 +52,13 @@ def build_llama_step(arch: str, seq: int, batch: int, mesh,
     rules = ShardingRules()
     specs = model_specs(cfg)
     shape = ShapeConfig("bench", seq, batch, "train" if train else "prefill")
-    params_abs = abstract_params(specs, mesh, rules)
-    batch_abs = input_specs(cfg, shape, mesh, rules)
     if train:
+        # single source of the full-train-step export, shared with the
+        # campaign engine's mode="train" spec path (repro.train.loop)
         opt_cfg = OptimizerConfig()
         init_fn, _ = make_optimizer(opt_cfg)
-        step = make_train_step(cfg, opt_cfg)
-        jitted = jax.jit(step, donate_argnums=(0, 1))
+        jitted, (params_abs, opt_abs, batch_abs) = train_step_exports(
+            cfg, seq, batch, mesh, rules=rules, opt_cfg=opt_cfg)
 
         def concrete(key):
             params = init_params(specs, key)
@@ -77,10 +76,9 @@ def build_llama_step(arch: str, seq: int, batch: int, mesh,
                  for k, v in b.items()}
             return params, opt, b
 
-        # abstract opt state with shardings for lowering
-        from repro.launch.dryrun import _opt_state_abstract
-        opt_abs = _opt_state_abstract(specs, "adamw", mesh, rules)
         return cfg, jitted, (params_abs, opt_abs, batch_abs), concrete
+    params_abs = abstract_params(specs, mesh, rules)
+    batch_abs = input_specs(cfg, shape, mesh, rules)
     from repro.models.transformer import prefill
     fn = jax.jit(lambda p, b: prefill(cfg, p, b))
     return cfg, fn, (params_abs, batch_abs), None

@@ -10,44 +10,43 @@ estimators unmodified (mixed estimator: systolic for GEMM regions,
 analytical fallback elsewhere — the paper pairs COCOSSim with an
 analytical model the same way); (ii) the analytical estimator is orders of
 magnitude cheaper to run (paper: 6.4 s vs 826 s mean) — we report both
-wall times; (iii) predictions track model size monotonically."""
+wall times; (iii) predictions track model size monotonically.
+
+The sweep runs through ``repro.campaign`` from the checked-in
+``specs/fig11_tpu.json``: the campaign engine itself exports each
+full train step (mode="train", mesh [8, 1]) via the same
+``train_step_exports`` path the pre-port loop used, so predictions are
+bit-identical to the hand-rolled version."""
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__) + "/..")
-from benchmarks.common import build_llama_step, emit  # noqa: E402
+from benchmarks.common import emit  # noqa: E402
+
+SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
+                    "fig11_tpu.json")
 
 
 def main() -> None:
-    from repro.core.estimators import (MixedEstimator, RooflineEstimator,
-                                       SystolicEstimator)
-    from repro.core.network import Torus
-    from repro.core.pipeline import export_workload, predict
-    from repro.core.systems import TPU_V3_CORE
-    from repro.launch.mesh import make_mesh
+    from repro.campaign import CampaignSpec, run_campaign
 
-    mesh = make_mesh((8, 1), ("data", "model"))
-    topo = Torus(dims=(4, 2), link_bw=70e9)
+    spec = CampaignSpec.from_json(SPEC)
+    res = run_campaign(spec, executor="serial")
+    assert res.summary["num_failed"] == 0, res.summary["failures"]
+    idx = {(r["workload"], r["estimator"]): r for r in res.ok_rows}
+
     rows = []
-    for arch in ("llama3-100m", "llama3-500m", "llama3-1b", "llama3-3b"):
-        cfg, jitted, abs_args, _ = build_llama_step(
-            arch, seq=2048, batch=8, mesh=mesh, train=True)
-        with mesh:
-            w = export_workload(jitted, *abs_args, name=arch)
-        prog = w.program("optimized")
-        p_ana = predict(prog, RooflineEstimator(TPU_V3_CORE), topo,
-                        slicer="linear", name=arch)
-        cocos = MixedEstimator(SystolicEstimator(TPU_V3_CORE, "cocossim"),
-                               RooflineEstimator(TPU_V3_CORE))
-        p_sys = predict(prog, cocos, topo, slicer="linear", name=arch)
+    for arch in [w.name for w in spec.workloads]:
+        p_ana = idx[(arch, "roofline")]
+        p_sys = idx[(arch, "mixed-cocossim")]
         rows.append({
             "name": f"fig11-{arch}",
-            "us_per_call": p_ana.step_time_s * 1e6,
-            "analytical_ms": round(p_ana.step_time_s * 1e3, 2),
-            "cocossim_ms": round(p_sys.step_time_s * 1e3, 2),
-            "analytical_wall_s": round(p_ana.simulation_wall_s, 3),
-            "cocossim_wall_s": round(p_sys.simulation_wall_s, 3),
+            "us_per_call": p_ana["step_time_s"] * 1e6,
+            "analytical_ms": round(p_ana["step_time_s"] * 1e3, 2),
+            "cocossim_ms": round(p_sys["step_time_s"] * 1e3, 2),
+            "analytical_wall_s": round(p_ana["simulation_wall_s"], 3),
+            "cocossim_wall_s": round(p_sys["simulation_wall_s"], 3),
             "systolic_pessimistic_vs_analytical":
-                p_sys.step_time_s >= p_ana.step_time_s,
+                p_sys["step_time_s"] >= p_ana["step_time_s"],
         })
     # monotonicity claim across model sizes
     ana = [r["analytical_ms"] for r in rows]

@@ -22,18 +22,19 @@ import sys
 sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import build_llama_step, emit, mape, measure  # noqa: E402
 
+SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
+                    "fig6_gpu.json")
+
 
 def main() -> None:
     import jax
-    from repro.campaign import (CampaignSpec, EstimatorSpec, TopologySpec,
-                                WorkloadSpec, run_campaign)
+    from repro.campaign import CampaignSpec, run_campaign
     from repro.core.estimators import ProfilingEstimator, RooflineEstimator
     from repro.core.network import AllToAllNode
     from repro.core.pipeline import export_workload, predict
     from repro.core.systems import host_system
     from repro.launch.mesh import make_mesh
 
-    mesh = make_mesh((4, 1), ("data", "model"))
     rows = []
 
     # ---------------- host-validated structural claims ----------------
@@ -77,36 +78,19 @@ def main() -> None:
         })
 
     # ---------------- paper-system predictions (A100..B200) -----------
-    # one campaign grid: 3 workloads × 4 systems × 2 estimator classes.
-    # the profiling-CLASS estimator at prediction scale is per-operator
-    # costing of the RAW (pre-fusion) export plus per-kernel launch
-    # overheads — the same pessimism mechanism as real profiling
-    # (compiler scope truncated at region boundaries), without needing
-    # the target GPU.  Execution-based profiling is used in the
-    # host-validated rows above.
-    gens = ["a100", "h100-paper", "h200-paper", "b200-paper"]
-    archs = ["llama3-100m", "llama3-500m", "llama3-1b"]
-    workloads = {}
-    for arch in archs:
-        cfg, jitted, abs_args, _ = build_llama_step(
-            arch, seq=2048, batch=4, mesh=mesh, train=True)
-        with mesh:
-            workloads[arch] = export_workload(jitted, *abs_args, name=arch)
-    spec = CampaignSpec(
-        name="fig6",
-        workloads=[WorkloadSpec(name=a) for a in archs],
-        systems=gens,
-        estimators=[
-            EstimatorSpec.from_dict({"kind": "roofline"}),
-            EstimatorSpec.from_dict(
-                {"kind": "roofline", "fidelity": "raw",
-                 "options": {"mode": "per-op", "include_overheads": True}}),
-        ],
-        slicers=["linear"],
-        topologies=[TopologySpec.from_dict(
-            {"kind": "auto", "params": {"num_devices": 4}})],
-    )
-    res = run_campaign(spec, workloads=workloads, executor="thread")
+    # one campaign from the checked-in spec (the same grid the
+    # paper_full suite runs): 3 train-step workloads × 4 systems × 2
+    # estimator classes.  The engine exports the train steps itself via
+    # the shared train_step_exports path.  The profiling-CLASS estimator
+    # at prediction scale is per-operator costing of the RAW
+    # (pre-fusion) export plus per-kernel launch overheads — the same
+    # pessimism mechanism as real profiling (compiler scope truncated at
+    # region boundaries), without needing the target GPU.
+    # Execution-based profiling is used in the host-validated rows above.
+    spec = CampaignSpec.from_json(SPEC)
+    gens = list(spec.systems)
+    archs = [w.name for w in spec.workloads]
+    res = run_campaign(spec, executor="thread")
     idx = {(r["workload"], r["system"], r["estimator"]): r
            for r in res.ok_rows}
     preds: dict[str, dict[str, float]] = {g: {} for g in gens}

@@ -4,42 +4,39 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 """Paper Fig 7: training-step latency for ResNet variants on a 4-GPU A100
 system (data parallel).  Host-validated structural claims at reduced batch
 (the estimator-ordering property is batch-independent), full-batch (256 per
-device, FP16 — paper Table III) A100 predictions from the same export."""
+device, FP16 — paper Table III) A100 predictions from the same export.
+
+The A100 prediction sweep runs through ``repro.campaign`` from the
+checked-in ``specs/fig7_resnet.json``: the campaign engine exports each
+full ResNet train step (mode="train", mesh [4, 1]) via the same
+``resnet_train_exports`` path the host-validated rows use, so campaign
+predictions are bit-identical to the pre-port hand-rolled loop."""
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import emit, mape, measure  # noqa: E402
 
+SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
+                    "fig7_resnet.json")
+
 
 def _build(depth: int, batch: int, img: int, mesh, barriers: bool = False):
+    """Shared-export wrapper: the abstract train step comes from
+    ``resnet_train_exports`` (also the campaign engine's resnet path);
+    only the concrete-arg builder for host measurement lives here."""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.distributed.sharding import act_sharding, param_sharding
-    from repro.models.params import abstract_params, init_params
-    from repro.models.resnet import ResNetConfig, resnet_forward, resnet_specs
-    from repro.train.optimizer import OptimizerConfig, adamw_update, adamw_init
+    from repro.models.params import init_params
+    from repro.models.resnet import (ResNetConfig, resnet_specs,
+                                     resnet_train_exports)
+    from repro.train.optimizer import OptimizerConfig, adamw_init
 
     cfg = ResNetConfig(depth=depth, block_barriers=barriers)
     specs = resnet_specs(cfg)
     opt_cfg = OptimizerConfig(name="adamw")
-
-    def step(params, opt, images, labels):
-        loss, grads = jax.value_and_grad(
-            lambda p: resnet_forward(cfg, p, images, labels)[0])(params)
-        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
-        return params, opt, loss
-
-    jitted = jax.jit(step, donate_argnums=(0, 1))
-    params_abs = abstract_params(specs, mesh)
-    img_sh = act_sharding(("batch", "seq", "seq", "embed"), mesh, None,
-                          (batch, img, img, 3))
-    lbl_sh = act_sharding(("batch",), mesh, None, (batch,))
-    imgs = jax.ShapeDtypeStruct((batch, img, img, 3), jnp.float16,
-                                sharding=img_sh)
-    lbls = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=lbl_sh)
-    from repro.launch.dryrun import _opt_state_abstract
-    opt_abs = _opt_state_abstract(specs, "adamw", mesh, None)
+    jitted, abs_args = resnet_train_exports(cfg, batch, img, mesh)
+    params_abs, _, imgs, lbls = abs_args
 
     def concrete(key):
         params = init_params(specs, key)
@@ -51,11 +48,12 @@ def _build(depth: int, batch: int, img: int, mesh, barriers: bool = False):
                 jax.device_put(jnp.asarray(
                     rng.standard_normal((batch, img, img, 3),
                                         dtype=np.float32).astype(np.float16)),
-                    img_sh),
+                    imgs.sharding),
                 jax.device_put(jnp.asarray(
-                    rng.integers(0, 1000, batch, dtype=np.int32)), lbl_sh))
+                    rng.integers(0, 1000, batch, dtype=np.int32)),
+                    lbls.sharding))
 
-    return jitted, (params_abs, opt_abs, imgs, lbls), concrete
+    return jitted, abs_args, concrete
 
 
 def main() -> None:
@@ -63,14 +61,13 @@ def main() -> None:
     from repro.core.estimators import ProfilingEstimator, RooflineEstimator
     from repro.core.network import AllToAllNode
     from repro.core.pipeline import export_workload, predict
-    from repro.core.systems import A100, host_system
+    from repro.core.systems import host_system
     from repro.launch.mesh import make_mesh
 
     mesh = make_mesh((4, 1), ("data", "model"))
     host = host_system()
     host_topo = AllToAllNode(num_devices=4,
                              link_bw=host.interconnect.link_bw)
-    a100_topo = AllToAllNode(num_devices=4, link_bw=100e9)
     rows = []
 
     # host-validated (small batch / image so ground truth runs in seconds)
@@ -102,19 +99,20 @@ def main() -> None:
         })
 
     # full-scale A100 predictions (paper config: 256/device, fp16, 224px)
-    for depth in (18, 34, 50, 101):
-        jitted, abs_args, _ = _build(depth, batch=64, img=224, mesh=mesh)
-        with mesh:
-            w = export_workload(jitted, *abs_args, name=f"resnet{depth}")
-        prog_opt = w.program("optimized")
-        p_ana = predict(prog_opt, RooflineEstimator(A100), a100_topo,
-                        slicer="linear", name=f"resnet{depth}")
+    # — one campaign from the checked-in spec; the engine exports the
+    # train steps itself (mode="train")
+    from repro.campaign import CampaignSpec, run_campaign
+
+    spec = CampaignSpec.from_json(SPEC)
+    res = run_campaign(spec, executor="serial")
+    assert res.summary["num_failed"] == 0, res.summary["failures"]
+    for r in res.ok_rows:
         rows.append({
-            "name": f"fig7-a100-resnet{depth}",
-            "us_per_call": p_ana.step_time_s * 1e6,
-            "analytical_ms": round(p_ana.step_time_s * 1e3, 2),
-            "comm_ms": round(p_ana.comm_s * 1e3, 2),
-            "segments": p_ana.num_segments,
+            "name": f"fig7-a100-{r['workload']}",
+            "us_per_call": r["step_time_s"] * 1e6,
+            "analytical_ms": round(r["step_time_s"] * 1e3, 2),
+            "comm_ms": round(r["comm_s"] * 1e3, 2),
+            "segments": r["num_segments"],
         })
     emit(rows, "fig7_resnet")
 

@@ -2,14 +2,21 @@
 workloads × systems × estimators × slicers × topologies × knobs, executed
 in parallel over one shared persistent (H, C, R) latency cache.
 
+Workloads come from pre-exported IR on disk, from jax exports of
+registered archs (``mode="forward"`` or ``mode="train"`` — the latter a
+full train step with optimizer state and mesh shardings), or from
+synthesized GEMM modules.  Full field reference: ``docs/campaign.md``;
+cache semantics: ``docs/caching.md``.
+
 Quickstart::
 
     from repro.campaign import CampaignSpec, run_campaign
 
     spec = CampaignSpec.from_dict({
         "name": "sweep",
-        "workloads": [{"name": "toy", "arch": "llama3-100m",
-                       "seq": 256, "batch": 2, "mode": "forward"}],
+        "workloads": [{"name": "llama3-100m", "arch": "llama3-100m",
+                       "mode": "train", "mesh": [4, 1],
+                       "seq": 256, "batch": 4}],
         "systems": ["a100", "h100", "b200"],
         "estimators": [{"kind": "roofline"},
                        {"kind": "roofline", "fidelity": "raw",
@@ -18,13 +25,15 @@ Quickstart::
         "slicers": ["linear", "dep"],
     })
     result = run_campaign(spec, out_dir="artifacts/sweep",
-                          executor="thread", cache_path=".cache/hcr.json")
+                          executor="process",
+                          cache_path=".cache/hcr.jsonl")
 
-or from the shell::
+or from the shell (``specs/paper_full.json`` reproduces every paper
+figure grid)::
 
-    python -m repro.campaign spec.json --out artifacts/sweep
+    python -m repro.campaign run spec.json --out artifacts/sweep
+    python -m repro.campaign validate spec.json
 """
-from .runner import CampaignResult, run_campaign
 from .spec import (CampaignSpec, EstimatorSpec, JobSpec, TopologySpec,
                    WorkloadSpec)
 
@@ -32,3 +41,16 @@ __all__ = [
     "CampaignSpec", "CampaignResult", "EstimatorSpec", "JobSpec",
     "TopologySpec", "WorkloadSpec", "run_campaign",
 ]
+
+
+def __getattr__(name):
+    """Lazy re-export of the runner (PEP 562).
+
+    Spec handling is pure stdlib; the runner pulls in the estimator
+    stack (numpy, and jax for arch exports).  Deferring that import
+    keeps ``python -m repro.campaign validate`` usable in minimal
+    environments — e.g. the CI docs job, which installs nothing."""
+    if name in ("CampaignResult", "run_campaign"):
+        from . import runner
+        return getattr(runner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,12 +1,32 @@
-"""CLI entry point: ``python -m repro.campaign spec.json [options]``.
+"""CLI entry point: ``python -m repro.campaign [run|validate] spec.json``.
 
-The spec file is the JSON form of :class:`~repro.campaign.spec.CampaignSpec`
-(see that module and ``examples/campaign_sweep.py``).  Minimal example::
+A spec file is either one campaign — the JSON form of
+:class:`~repro.campaign.spec.CampaignSpec` (see ``docs/campaign.md`` for
+the full field reference) — or a *suite* that sequences several::
+
+    {"name": "paper", "suite": ["fig7_resnet.json", "fig10_gemm.json"]}
+
+Suite entries are paths relative to the suite file (or inline campaign
+dicts); sub-campaigns run sequentially, sharing one persistent (H, C, R)
+cache and writing results under ``<out>/<campaign-name>/``.  This is what
+makes ``python -m repro.campaign run specs/paper_full.json`` a
+single-command full-paper reproduction.
+
+``validate`` checks every spec (grid axes, workload sources, mesh shapes)
+and prints the expanded grid size without running anything — CI runs it
+on the checked-in ``specs/*.json``.
+
+Arch workloads with a ``mesh`` need that many XLA devices; the CLI counts
+the devices the specs need and presets
+``--xla_force_host_platform_device_count`` *before* jax initializes.
+
+Minimal single-campaign example::
 
     {
       "name": "gpu-sweep",
       "workloads": [{"name": "llama3-100m", "arch": "llama3-100m",
-                     "seq": 256, "batch": 2}],
+                     "mode": "train", "mesh": [4, 1],
+                     "seq": 256, "batch": 4}],
       "systems": ["a100", "h100", "b200"],
       "estimators": [{"kind": "roofline"},
                      {"kind": "roofline", "fidelity": "raw",
@@ -18,57 +38,153 @@ The spec file is the JSON form of :class:`~repro.campaign.spec.CampaignSpec`
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
-from .runner import run_campaign
+# only spec.py (pure stdlib) at module load: `validate` must work in an
+# environment without jax/numpy installed (the CI docs job); the runner
+# and its estimator imports load lazily in the `run` branch
 from .spec import CampaignSpec
-from .summary import format_table
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.campaign",
-        description="Run a prediction campaign from a JSON grid spec.")
-    ap.add_argument("spec", help="path to the campaign spec (JSON)")
-    ap.add_argument("--out", default="artifacts/campaign",
-                    help="output directory for results.jsonl/csv + "
-                         "summary.json (default: artifacts/campaign)")
-    ap.add_argument("--executor", default="thread",
-                    choices=("serial", "thread", "process"),
-                    help="job executor (default: thread)")
-    ap.add_argument("--jobs", type=int, default=None,
-                    help="max parallel workers (default: executor's choice)")
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="persistent (H,C,R) cache file shared across runs")
-    ap.add_argument("--dry-run", action="store_true",
-                    help="print the expanded grid and exit")
-    ap.add_argument("--quiet", action="store_true",
-                    help="suppress per-job progress lines")
-    args = ap.parse_args(argv)
+def load_specs(path: str) -> list[tuple[str, CampaignSpec]]:
+    """Load a spec file into ``[(campaign_name, CampaignSpec), ...]``.
 
-    spec = CampaignSpec.from_json(args.spec)
+    A plain campaign yields one entry; a suite file yields one per
+    sub-campaign (path entries resolved relative to the suite file).
+    """
+    with open(path) as f:
+        raw = json.load(f)
+    if "suite" not in raw:
+        spec = CampaignSpec.from_dict(raw)
+        return [(spec.name, spec)]
+    base = os.path.dirname(os.path.abspath(path))
+    out: list[tuple[str, CampaignSpec]] = []
+    for entry in raw["suite"]:
+        if isinstance(entry, str):
+            sub = os.path.join(base, entry)
+            with open(sub) as f:
+                spec = CampaignSpec.from_dict(json.load(f))
+        else:
+            spec = CampaignSpec.from_dict(entry)
+        if any(spec.name == n for n, _ in out):
+            # names key per-campaign output dirs — a duplicate would
+            # silently clobber the earlier campaign's results
+            raise ValueError(
+                f"suite {path!r}: duplicate campaign name {spec.name!r}")
+        out.append((spec.name, spec))
+    return out
+
+
+def _devices_needed(specs: list[tuple[str, CampaignSpec]]) -> int:
+    need = 1
+    for _, spec in specs:
+        for w in spec.workloads:
+            if w.mesh:
+                n = 1
+                for s in w.mesh:
+                    n *= s
+                need = max(need, n)
+    return need
+
+
+def _preset_device_count(specs: list[tuple[str, CampaignSpec]]) -> None:
+    """Give the host XLA platform enough devices for every spec mesh.
+
+    Only effective before jax initializes, and only when the user hasn't
+    set XLA_FLAGS themselves."""
+    need = _devices_needed(specs)
+    if need <= 1:
+        return
+    if "jax" in sys.modules:
+        return  # too late to change the platform; builders will verify
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={need}")
+
+
+def _print_grid(name: str, spec: CampaignSpec) -> None:
     jobs = spec.expand()
-    print(f"campaign {spec.name!r}: {len(jobs)} grid points "
+    print(f"campaign {name!r}: {len(jobs)} grid points "
           f"({len(spec.workloads)} workloads × {len(spec.systems)} systems "
           f"× {len(spec.estimators)} estimators × {len(spec.slicers)} "
           f"slicers × {len(spec.topologies)} topologies)", flush=True)
-    if args.dry_run:
-        for j in jobs:
-            r = j.to_row()
-            print("  " + " × ".join(str(r[k]) for k in
-                                    ("workload", "fidelity", "system",
-                                     "estimator", "slicer", "topology")))
-        return 0
 
-    result = run_campaign(
-        spec, out_dir=args.out, executor=args.executor,
-        max_workers=args.jobs, cache_path=args.cache,
-        progress=not args.quiet)
-    print(format_table(result.summary))
-    if result.csv_path:
-        print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
-              f"{result.summary_path}")
-    return 1 if result.summary["num_failed"] else 0
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    command = "run"
+    if argv and argv[0] in ("run", "validate"):
+        command = argv.pop(0)
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description="Run or validate a prediction campaign from a JSON "
+                    "grid spec (single campaign or suite).")
+    ap.add_argument("spec", nargs="+" if command == "validate" else None,
+                    help="path to the campaign/suite spec (JSON)")
+    if command == "run":
+        ap.add_argument("--out", default="artifacts/campaign",
+                        help="output directory for results.jsonl/csv + "
+                             "summary.json (default: artifacts/campaign)")
+        ap.add_argument("--executor", default="thread",
+                        choices=("serial", "thread", "process"),
+                        help="job executor (default: thread)")
+        ap.add_argument("--jobs", type=int, default=None,
+                        help="max parallel workers (default: executor's "
+                             "choice)")
+        ap.add_argument("--cache", default=None, metavar="PATH",
+                        help="persistent (H,C,R) cache file shared across "
+                             "runs and live workers")
+        ap.add_argument("--dry-run", action="store_true",
+                        help="print the expanded grid and exit")
+        ap.add_argument("--quiet", action="store_true",
+                        help="suppress per-job progress lines")
+    args = ap.parse_args(argv)
+
+    if command == "validate":
+        bad = 0
+        for path in args.spec:
+            try:
+                specs = load_specs(path)
+                for name, spec in specs:
+                    spec.validate()
+                    _print_grid(name, spec)
+            except (OSError, ValueError, KeyError, TypeError,
+                    json.JSONDecodeError) as e:
+                print(f"INVALID {path}: {type(e).__name__}: {e}")
+                bad += 1
+                continue
+            print(f"ok {path}")
+        return 1 if bad else 0
+
+    from .runner import run_campaign
+    from .summary import format_table
+
+    specs = load_specs(args.spec)
+    _preset_device_count(specs)
+    multi = len(specs) > 1
+    failed = 0
+    for name, spec in specs:
+        _print_grid(name, spec)
+        if args.dry_run:
+            for j in spec.expand():
+                r = j.to_row()
+                print("  " + " × ".join(str(r[k]) for k in
+                                        ("workload", "fidelity", "system",
+                                         "estimator", "slicer", "topology")))
+            continue
+        out_dir = os.path.join(args.out, name) if multi else args.out
+        result = run_campaign(
+            spec, out_dir=out_dir, executor=args.executor,
+            max_workers=args.jobs, cache_path=args.cache,
+            progress=not args.quiet)
+        print(format_table(result.summary))
+        if result.csv_path:
+            print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
+                  f"{result.summary_path}")
+        failed += result.summary["num_failed"]
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -13,10 +13,8 @@ from ..core.network import AllToAllNode, Dragonfly, MultiPod, Topology, Torus
 from ..core.pipeline import Workload, export_workload
 from ..core.systems import System, get_system
 from ..core.ir.graph import Program
-from .spec import EstimatorSpec, TopologySpec, WorkloadSpec
-
-ESTIMATOR_KINDS = ("roofline", "systolic", "mixed", "profiling")
-TOPOLOGY_KINDS = ("auto", "a2a", "dragonfly", "torus", "multipod")
+from .spec import (ESTIMATOR_KINDS, TOPOLOGY_KINDS, EstimatorSpec,
+                   TopologySpec, WorkloadSpec)
 
 
 def build_estimator(spec: EstimatorSpec, system: System, *,
@@ -82,7 +80,9 @@ def build_system(name: str) -> System:
 
 
 def build_workload(spec: WorkloadSpec) -> Workload:
-    """Materialize a workload: read pre-exported IR or export via jax."""
+    """Materialize a workload from its spec source: read pre-exported IR
+    from disk, synthesize a GEMM, or export via jax (forward or full
+    train step, per ``spec.mode``)."""
     if spec.stablehlo_path or spec.hlo_path:
         w = Workload(name=spec.name)
         if spec.stablehlo_path:
@@ -92,25 +92,112 @@ def build_workload(spec: WorkloadSpec) -> Workload:
             with open(spec.hlo_path) as f:
                 w.hlo_text = f.read()
         return w
+    if spec.gemm is not None:
+        return _synthesize_gemm(spec)
     return _export_from_arch(spec)
 
 
-def _export_from_arch(spec: WorkloadSpec) -> Workload:
+def _synthesize_gemm(spec: WorkloadSpec) -> Workload:
+    """A single-``dot_general`` StableHLO workload, written directly as
+    MLIR text (no jax needed) — the operator-level unit of the paper's
+    Fig 10 GEMM sweeps.  The lone compute region it slices into carries
+    exactly the (M, N, K, dtype) the systolic/roofline estimators cost."""
+    g = spec.gemm
+    m, n, k = int(g["m"]), int(g["n"]), int(g["k"])
+    dt = str(g.get("dtype", "bf16"))
+    lhs, rhs, out = f"{m}x{k}x{dt}", f"{k}x{n}x{dt}", f"{m}x{n}x{dt}"
+    text = (
+        "module @gemm {\n"
+        f"  func.func public @main(%arg0: tensor<{lhs}>, "
+        f"%arg1: tensor<{rhs}>) -> tensor<{out}> {{\n"
+        f"    %0 = stablehlo.dot_general %arg0, %arg1, "
+        f"contracting_dims = [1] x [0], "
+        f"precision = [DEFAULT, DEFAULT] : "
+        f"(tensor<{lhs}>, tensor<{rhs}>) -> tensor<{out}>\n"
+        f"    return %0 : tensor<{out}>\n"
+        "  }\n"
+        "}\n")
+    return Workload(name=spec.name, stablehlo_text=text,
+                    meta={"gemm": {"m": m, "n": n, "k": k, "dtype": dt}})
+
+
+def _mesh_for(spec: WorkloadSpec):
+    """Build the spec's device mesh (None when the spec has none)."""
+    if spec.mesh is None:
+        return None
     import jax
 
+    from ..launch.mesh import make_mesh
+
+    shape = tuple(spec.mesh)
+    need = 1
+    for s in shape:
+        need *= s
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"workload {spec.name!r}: mesh {shape} needs {need} devices "
+            f"but only {have} are visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
+            "starts (the repro.campaign CLI does this automatically)")
+    axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+    return make_mesh(shape, axes)
+
+
+def _export_from_arch(spec: WorkloadSpec) -> Workload:
+    """Export a workload from a registered model config via jax.
+
+    ``mode="forward"`` lowers one forward pass; ``mode="train"`` lowers a
+    full train step (loss + grad + optimizer update) with abstract
+    optimizer state, sharded over the spec's mesh — the export paths are
+    shared with the fig benchmarks (``repro.train.loop.train_step_exports``
+    / ``repro.models.resnet.resnet_train_exports``), so campaign numbers
+    are bit-identical to the hand-rolled sweeps they replaced."""
+    import contextlib
+
+    import jax
+
+    mesh = _mesh_for(spec)
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+
+    if spec.arch.startswith("resnet"):
+        from ..models.resnet import resnet_arch_config, resnet_train_exports
+        from ..train.optimizer import OptimizerConfig
+
+        if spec.mode != "train":
+            raise ValueError(
+                f"workload {spec.name!r}: resnet export is train-only "
+                "(the fig7 workload family); set mode='train'")
+        cfg = resnet_arch_config(spec.arch)
+        jitted, abs_args = resnet_train_exports(
+            cfg, spec.batch, spec.img, mesh,
+            opt_cfg=OptimizerConfig(name=spec.optimizer))
+        with ctx:
+            return export_workload(jitted, *abs_args, name=spec.name)
+
+    from ..models import get_config
+
+    cfg = get_config(spec.arch)
+    if spec.mode == "train":
+        from ..train.loop import train_step_exports
+        from ..train.optimizer import OptimizerConfig
+
+        jitted, abs_args = train_step_exports(
+            cfg, spec.seq, spec.batch, mesh,
+            opt_cfg=OptimizerConfig(name=spec.optimizer))
+        with ctx:
+            return export_workload(jitted, *abs_args, name=spec.name)
+
     from ..configs.base import ShapeConfig
-    from ..models import get_config, input_specs, model_specs
+    from ..distributed.sharding import ShardingRules
+    from ..models import input_specs, model_specs
     from ..models.params import abstract_params
     from ..models.transformer import forward
 
-    cfg = get_config(spec.arch)
-    if spec.mode != "forward":
-        raise ValueError(
-            f"workload {spec.name!r}: CLI export supports mode='forward'; "
-            "for train steps pass pre-exported IR via stablehlo_path/"
-            "hlo_path or supply Workload objects through the API")
     shape = ShapeConfig(spec.name, spec.seq, spec.batch, "train")
-    params_abs = abstract_params(model_specs(cfg))
-    batch_abs = input_specs(cfg, shape)
-    return export_workload(jax.jit(lambda p, b: forward(cfg, p, b)),
-                           params_abs, batch_abs, name=spec.name)
+    rules = ShardingRules() if mesh is not None else None
+    params_abs = abstract_params(model_specs(cfg), mesh, rules)
+    batch_abs = input_specs(cfg, shape, mesh, rules)
+    with ctx:
+        return export_workload(jax.jit(lambda p, b: forward(cfg, p, b)),
+                               params_abs, batch_abs, name=spec.name)

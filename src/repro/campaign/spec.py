@@ -11,14 +11,34 @@ import itertools
 import json
 from dataclasses import asdict, dataclass, field
 
+#: closed axis vocabularies — the single source of truth (builders
+#: dispatches on these); kept here so ``validate`` needs no heavy imports
+ESTIMATOR_KINDS = ("roofline", "systolic", "mixed", "profiling")
+TOPOLOGY_KINDS = ("auto", "a2a", "dragonfly", "torus", "multipod")
+SLICER_NAMES = ("linear", "dep", "dependency-aware")
+
 
 @dataclass(frozen=True)
 class WorkloadSpec:
-    """One workload axis entry.  Exactly one source must be given:
+    """One workload axis entry.  Exactly one source family must be given:
 
     * ``stablehlo_path`` / ``hlo_path`` — pre-exported IR text on disk;
-    * ``arch`` (+ ``seq``/``batch``/``mode``) — export via jax from a
-      registered model config (requires jax at campaign-build time).
+    * ``arch`` (+ ``seq``/``batch``/``mode``/``mesh``/…) — export via jax
+      from a registered model config (requires jax at campaign-build
+      time).  ``mode="forward"`` exports one forward pass;
+      ``mode="train"`` exports a *full train step* — loss + gradients +
+      optimizer update, with abstract optimizer state and mesh shardings
+      threaded through the lowering.  ``arch`` ids cover the LM registry
+      ("llama3-1b", …) and the ResNet family ("resnet50", …; train-only,
+      ``img`` sets the image size);
+    * ``gemm`` — a synthesized single-``dot_general`` StableHLO workload
+      (``{"m":.., "n":.., "k":.., "dtype":"bf16"}``) for operator-level
+      sweeps like the paper's Fig 10 — no jax required.
+
+    ``mesh`` is the device-mesh shape for arch exports: 2 entries map to
+    ("data", "model") axes, 3 to ("pod", "data", "model").  The campaign
+    process needs at least ``prod(mesh)`` XLA devices (the CLI presets
+    the host-platform device count from the spec before jax starts).
 
     ``fidelity`` is the *default* program fidelity for this workload; an
     :class:`EstimatorSpec` may override it (the paper's estimator classes
@@ -28,21 +48,54 @@ class WorkloadSpec:
     stablehlo_path: str | None = None
     hlo_path: str | None = None
     arch: str | None = None
+    gemm: dict | None = None         # {"m","n","k","dtype"} synthesis
     seq: int = 512
     batch: int = 4
+    img: int = 224                   # resnet archs: input image size
     mode: str = "forward"            # "forward" | "train"
+    mesh: tuple | None = None        # device mesh shape for arch exports
+    optimizer: str = "adamw"         # train-mode optimizer ("adamw"/"adafactor")
     fidelity: str | None = None      # default: optimized if available
 
     @classmethod
     def from_dict(cls, d: dict) -> "WorkloadSpec":
+        """Build from the JSON dict form (mesh lists become tuples)."""
+        d = dict(d)
+        if d.get("mesh") is not None:
+            d["mesh"] = tuple(int(x) for x in d["mesh"])
         return cls(**d)
 
     def validate(self) -> None:
-        sources = [self.stablehlo_path, self.hlo_path, self.arch]
-        if not any(sources):
+        """Reject specs that would run wrong or not at all (exactly one
+        source family, known mode/optimizer, sane mesh/gemm fields)."""
+        families = [bool(self.stablehlo_path or self.hlo_path),
+                    self.arch is not None, self.gemm is not None]
+        if sum(families) == 0:
             raise ValueError(
                 f"workload {self.name!r}: need stablehlo_path, hlo_path, "
-                "or arch")
+                "arch, or gemm")
+        if sum(families) > 1:
+            raise ValueError(
+                f"workload {self.name!r}: give exactly one source family "
+                "(stablehlo_path/hlo_path, arch, or gemm) — extra sources "
+                "would be silently ignored")
+        if self.mode not in ("forward", "train"):
+            raise ValueError(
+                f"workload {self.name!r}: mode must be 'forward' or "
+                f"'train', got {self.mode!r}")
+        if self.gemm is not None:
+            missing = [k for k in ("m", "n", "k") if k not in self.gemm]
+            if missing:
+                raise ValueError(
+                    f"workload {self.name!r}: gemm spec missing {missing}")
+        if self.mesh is not None and len(self.mesh) not in (2, 3):
+            raise ValueError(
+                f"workload {self.name!r}: mesh must have 2 (data, model) "
+                f"or 3 (pod, data, model) entries, got {self.mesh}")
+        if self.optimizer not in ("adamw", "adafactor"):
+            raise ValueError(
+                f"workload {self.name!r}: unknown optimizer "
+                f"{self.optimizer!r}")
 
 
 @dataclass(frozen=True)
@@ -60,12 +113,15 @@ class EstimatorSpec:
 
     @classmethod
     def from_dict(cls, d: dict) -> "EstimatorSpec":
+        """Build from the JSON dict form (options dict becomes sorted
+        key/value pairs so the spec stays hashable and picklable)."""
         d = dict(d)
         opts = d.pop("options", {}) or {}
         return cls(options=tuple(sorted(opts.items())), **d)
 
     @property
     def options_dict(self) -> dict:
+        """The options pairs as a plain dict."""
         return dict(self.options)
 
     @property
@@ -103,6 +159,8 @@ class TopologySpec:
 
     @classmethod
     def from_dict(cls, d: dict) -> "TopologySpec":
+        """Build from the JSON dict form (list params, e.g. torus dims,
+        become tuples; params become sorted pairs)."""
         d = dict(d)
         params = d.pop("params", {}) or {}
         for k, v in list(params.items()):
@@ -112,10 +170,12 @@ class TopologySpec:
 
     @property
     def params_dict(self) -> dict:
+        """The params pairs as a plain dict."""
         return dict(self.params)
 
     @property
     def label(self) -> str:
+        """Short id used in result rows (kind + device count if given)."""
         n = self.params_dict.get("num_devices")
         return f"{self.kind}{n}" if n else self.kind
 
@@ -135,6 +195,7 @@ class JobSpec:
     compression: float = 1.0
 
     def to_row(self) -> dict:
+        """The job's axes as a flat result-row prefix."""
         return {
             "job_id": self.job_id,
             "workload": self.workload,
@@ -166,6 +227,8 @@ class CampaignSpec:
 
     @classmethod
     def from_dict(cls, d: dict) -> "CampaignSpec":
+        """Build and validate from the JSON dict form; unknown keys are
+        rejected so spec typos fail fast."""
         d = dict(d)
         known = {f for f in cls.__dataclass_fields__}
         unknown = set(d) - known
@@ -191,10 +254,12 @@ class CampaignSpec:
 
     @classmethod
     def from_json(cls, path: str) -> "CampaignSpec":
+        """Load and validate a spec file (see ``docs/campaign.md``)."""
         with open(path) as f:
             return cls.from_dict(json.load(f))
 
     def to_dict(self) -> dict:
+        """JSON-ready dict form; round-trips through :meth:`from_dict`."""
         d = asdict(self)
         for e in d["estimators"]:
             e["options"] = dict(e["options"])
@@ -203,7 +268,13 @@ class CampaignSpec:
         return d
 
     def validate(self, provided: set[str] | frozenset = frozenset()) -> None:
-        """``provided``: workload names supplied in-memory to the runner —
+        """Reject grids that could not run: empty axes, sourceless
+        workloads, and axis values outside the closed vocabularies
+        (estimator/topology kinds, slicer names, system ids) — so
+        ``python -m repro.campaign validate`` catches typos that would
+        otherwise only surface as all-error rows at run time.
+
+        ``provided``: workload names supplied in-memory to the runner —
         those need no on-disk/arch source in the spec."""
         if not self.workloads:
             raise ValueError("campaign spec: at least one workload required")
@@ -214,9 +285,32 @@ class CampaignSpec:
                      "overlap", "straggler_factor", "compression"):
             if not getattr(self, axis):
                 raise ValueError(f"campaign spec: axis {axis!r} is empty")
+        for e in self.estimators:
+            if e.kind not in ESTIMATOR_KINDS:
+                raise ValueError(
+                    f"campaign spec: unknown estimator kind {e.kind!r}; "
+                    f"have {ESTIMATOR_KINDS}")
+        for t in self.topologies:
+            if t.kind not in TOPOLOGY_KINDS:
+                raise ValueError(
+                    f"campaign spec: unknown topology kind {t.kind!r}; "
+                    f"have {TOPOLOGY_KINDS}")
+        for s in self.slicers:
+            if s not in SLICER_NAMES:
+                raise ValueError(
+                    f"campaign spec: unknown slicer {s!r}; "
+                    f"have {SLICER_NAMES}")
+        # stdlib-only import: the system table carries no numpy/jax
+        from ..core.systems import SYSTEMS
+        for name in self.systems:
+            if name != "host" and name.lower() not in SYSTEMS:
+                raise ValueError(
+                    f"campaign spec: unknown system {name!r}; "
+                    f"have {['host', *SYSTEMS]}")
 
     @property
     def num_points(self) -> int:
+        """Grid size: the product of all axis lengths."""
         return (len(self.workloads) * len(self.systems)
                 * len(self.estimators) * len(self.slicers)
                 * len(self.topologies) * len(self.overlap)

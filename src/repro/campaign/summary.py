@@ -105,11 +105,15 @@ def format_table(summary: dict) -> str:
             lines.append(f"  agreement [{wl}] {pair}: {tau:.2f}")
     cache = summary.get("cache")
     if cache:
-        lines.append(
+        line = (
             f"  cache: {cache['hits']} hits / {cache['misses']} misses "
             f"(hit rate {cache['hit_rate']:.1%}), "
             f"{cache['loaded_entries']} loaded, "
             f"{cache['new_entries']} new entries")
+        if cache.get("time_saving_fraction"):
+            line += (f", eval time saved "
+                     f"{cache['time_saving_fraction']:.1%}")
+        lines.append(line)
     if "wall_s" in summary:
         lines.append(f"  wall: {summary['wall_s']:.2f} s")
     return "\n".join(lines)

@@ -13,8 +13,21 @@ Two layers:
     that campaigns, benchmarks, and repeated runs share across processes,
     extending the within-run savings to across-run savings.
 
-The on-disk format is versioned: ``SCHEMA_VERSION`` guards the file layout
-and ``FINGERPRINT_VERSION`` guards the region-fingerprint algorithm (the R
+The on-disk format is a *file-locked append log* (JSONL): line 1 is a
+version header, every further line is one ``{"k": key, "v": seconds,
+"c": eval_cost_seconds}`` record.  Appends take an exclusive ``flock``;
+readers take a shared one and :meth:`PersistentCache.refresh` absorbs
+only the log tail written since the last read — which is what lets
+process-pool campaign workers sharing one cache path observe each
+other's freshly computed entries *mid-campaign* instead of a startup
+snapshot.  Each entry also carries the wall-clock cost of the estimator
+evaluation that produced it, so a later run (or another process) that
+hits the entry can account the time it *avoided* — making
+``CacheStats.time_saving_fraction`` meaningful across runs, not just
+within one.
+
+The format is versioned: ``SCHEMA_VERSION`` guards the file layout and
+``FINGERPRINT_VERSION`` guards the region-fingerprint algorithm (the R
 of the key).  Bumping either invalidates stale files on load instead of
 silently serving latencies keyed by an incompatible fingerprint.
 """
@@ -30,14 +43,41 @@ from typing import MutableMapping
 from ..slicing.regions import ComputeRegion
 from .base import ComputeEstimator
 
-#: bump when the on-disk JSON layout changes
-SCHEMA_VERSION = 1
+#: bump when the on-disk layout changes (2 = JSONL append log + costs)
+SCHEMA_VERSION = 2
 #: bump when slicing.regions.region_fingerprint changes what it hashes
 FINGERPRINT_VERSION = 1
+
+try:
+    import fcntl
+
+    def _lock_sh(f):
+        fcntl.flock(f.fileno(), fcntl.LOCK_SH)
+
+    def _lock_ex(f):
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+
+    def _unlock(f):
+        fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+except ImportError:  # non-POSIX: degrade to unlocked (single-process) use
+    def _lock_sh(f):
+        pass
+
+    def _lock_ex(f):
+        pass
+
+    def _unlock(f):
+        pass
 
 
 @dataclass
 class CacheStats:
+    """Hit/miss counters plus the paper's evaluation-time accounting.
+
+    ``saved_seconds`` is the estimator wall time *avoided* by hits: for a
+    key this run computed itself it is the measured cost of that first
+    evaluation; for a key served from a shared/persistent store it is the
+    cost persisted by whichever run computed it."""
     hits: int = 0
     misses: int = 0
     saved_seconds: float = 0.0     # estimator wall-time avoided (measured)
@@ -57,19 +97,27 @@ class CacheStats:
 
 
 class PersistentCache:
-    """On-disk (H, C, R) -> seconds store shared across runs and processes.
+    """On-disk (H, C, R) -> (seconds, eval cost) store shared across runs
+    *and live processes*.
 
-    Thread-safe for concurrent readers/writers within one process; across
-    processes, workers return their freshly computed entries and the owning
-    process merges + saves (last-writer-wins on identical keys is harmless
-    because entries are deterministic per key for a given estimator).
+    Thread-safe within one process.  Across processes the backing file is
+    an append log guarded by ``flock``: :meth:`append` writes through
+    immediately (absorbing any lines other processes appended first) and
+    :meth:`refresh` tails the log, so two workers pointed at one path see
+    each other's fresh entries mid-run.  :meth:`save` compacts the log
+    (atomic tmp + rename).  Entries are deterministic per key for a given
+    estimator, so last-writer-wins races are harmless.
     """
 
     def __init__(self, path: str | None = None):
         self.path = path
         self.entries: dict[str, float] = {}
+        self.costs: dict[str, float] = {}
         self.loaded_entries = 0
         self._lock = threading.Lock()
+        self._offset = 0          # bytes of the log already absorbed
+        self._header_ok = False   # file exists with a matching header
+        self._gen: str | None = None  # header generation id last seen
         if path:
             self.load(path)
 
@@ -89,55 +137,214 @@ class PersistentCache:
     def get(self, key: str, default=None):
         return self.entries.get(key, default)
 
+    def cost(self, key: str) -> float:
+        """Persisted estimator wall cost of the evaluation behind ``key``
+        (0.0 when the producing run predates cost persistence)."""
+        return self.costs.get(key, 0.0)
+
+    # ------------------------------ log I/O ------------------------------
+
+    def _absorb_line(self, line: str) -> int:
+        """Parse one log line into memory; returns 1 for a new entry."""
+        line = line.strip()
+        if not line:
+            return 0
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            return 0  # torn tail of a crashed writer — ignorable
+        if not isinstance(rec, dict) or "k" not in rec:
+            return 0
+        key = str(rec["k"])
+        new = key not in self.entries
+        self.entries[key] = float(rec.get("v", 0.0))
+        if rec.get("c"):
+            self.costs[key] = float(rec["c"])
+        return 1 if new else 0
+
+    @staticmethod
+    def _parse_header_gen(line: str) -> str | None:
+        """The generation id of a valid v2 header, None for foreign/stale."""
+        try:
+            h = json.loads(line)
+        except json.JSONDecodeError:
+            return None
+        if not (isinstance(h, dict)
+                and h.get("schema") == SCHEMA_VERSION
+                and h.get("fingerprint") == FINGERPRINT_VERSION):
+            return None
+        return str(h.get("gen", ""))
+
+    def _sync_locked(self, f) -> tuple[bool, int]:
+        """With the flock *and* ``self._lock`` held: validate the header,
+        detect compaction, absorb every unread record.
+
+        Compaction by another process is detected via the header's
+        generation id (every :meth:`save` writes a fresh one), not file
+        size — a compacted log that regrew past the old offset would
+        otherwise be tailed from a stale mid-record position.  Returns
+        ``(valid_file, newly_seen_keys)``.
+        """
+        size = os.fstat(f.fileno()).st_size
+        if size == 0:
+            self._offset = 0
+            self._header_ok = False
+            return True, 0
+        f.seek(0)
+        gen = self._parse_header_gen(f.readline())
+        if gen is None:
+            self._header_ok = False
+            return False, 0
+        header_end = f.tell()
+        if (gen != self._gen or not self._header_ok
+                or self._offset < header_end or self._offset > size):
+            self._gen = gen
+            self._header_ok = True
+            self._offset = header_end
+        f.seek(self._offset)
+        new = 0
+        for line in f:
+            new += self._absorb_line(line)
+        self._offset = f.tell()
+        return True, new
+
     def load(self, path: str) -> int:
-        """Load a cache file; stale/foreign files are discarded, not errors."""
+        """Load a cache log; stale/foreign files are discarded, not errors."""
         self.path = path
         if not os.path.exists(path):
             return 0
         try:
             with open(path) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
+                _lock_sh(f)
+                try:
+                    with self._lock:
+                        ok, new = self._sync_locked(f)
+                        if ok:
+                            self.loaded_entries = new
+                finally:
+                    _unlock(f)
+        except OSError:
             return 0
-        if not isinstance(data, dict):
-            return 0
-        if (data.get("schema") != SCHEMA_VERSION
-                or data.get("fingerprint") != FINGERPRINT_VERSION):
-            return 0  # versioned invalidation: stale layout or algorithm
-        entries = data.get("entries")
-        if not isinstance(entries, dict):
-            return 0
-        with self._lock:
-            self.entries.update({str(k): float(v)
-                                 for k, v in entries.items()})
-            self.loaded_entries = len(entries)
         return self.loaded_entries
 
-    def merge(self, entries: MutableMapping[str, float]) -> int:
-        """Fold in entries computed elsewhere; returns #new keys."""
+    def refresh(self) -> int:
+        """Absorb log records other processes wrote since the last read.
+
+        Cheap when nothing changed (one ``stat``).  Compaction by another
+        process is detected via the header generation id and triggers a
+        full re-read (in-memory entries are kept — absorption only
+        adds/overwrites).  Returns the number of previously unseen keys.
+        """
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        try:
+            if os.path.getsize(self.path) == self._offset and self._header_ok:
+                return 0
+        except OSError:
+            return 0
+        try:
+            with open(self.path) as f:
+                _lock_sh(f)
+                try:
+                    with self._lock:
+                        ok, new = self._sync_locked(f)
+                finally:
+                    _unlock(f)
+        except OSError:
+            return 0
+        return new if ok else 0
+
+    def append(self, key: str, value: float, cost: float = 0.0) -> None:
+        """Record an entry and write it through to the shared log.
+
+        Holds an exclusive lock across (absorb others' records, write own
+        line), so concurrent appenders interleave cleanly and this
+        process's offset stays coherent with the file.
+        """
+        with self._lock:
+            self.entries[key] = value
+            if cost:
+                self.costs[key] = cost
+        if not self.path:
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "a+") as f:
+            _lock_ex(f)
+            try:
+                with self._lock:
+                    ok, _ = self._sync_locked(f)
+                    if not ok:
+                        return  # foreign/stale file: leave it alone
+                    if not self._header_ok:  # empty file: initialize it
+                        import uuid
+                        self._gen = uuid.uuid4().hex
+                        f.write(json.dumps(
+                            {"schema": SCHEMA_VERSION,
+                             "fingerprint": FINGERPRINT_VERSION,
+                             "gen": self._gen}) + "\n")
+                        self._header_ok = True
+                    f.write(json.dumps(
+                        {"k": key, "v": value, "c": cost or 0.0},
+                        separators=(",", ":")) + "\n")
+                    f.flush()
+                    self._offset = f.tell()
+            finally:
+                _unlock(f)
+
+    def merge(self, entries: MutableMapping) -> int:
+        """Fold in entries computed elsewhere; returns #new keys.
+
+        Values may be plain seconds or ``(seconds, cost)`` pairs (the
+        form campaign workers ship back)."""
         with self._lock:
             new = sum(1 for k in entries if k not in self.entries)
-            self.entries.update(entries)
+            for k, v in entries.items():
+                if isinstance(v, (tuple, list)):
+                    self.entries[k] = float(v[0])
+                    if len(v) > 1 and v[1]:
+                        self.costs[k] = float(v[1])
+                else:
+                    self.entries[k] = float(v)
         return new
 
     def save(self, path: str | None = None) -> str:
-        """Atomic write (tmp + rename) so concurrent readers never see a
-        torn file."""
+        """Compact the log: absorb any concurrent records, then atomically
+        rewrite header + one line per entry (tmp + rename), so readers
+        never see a torn file.  The rewritten header carries a fresh
+        generation id; other live processes notice it on their next
+        refresh/append and re-read instead of tailing a stale offset.
+
+        Compaction is meant for run *end* (the campaign runner saves
+        once, after workers exit).  A line another process appends in
+        the instant between the absorb and the rename lands in the
+        replaced inode — that process still holds the entry in memory
+        and re-adds it at its own save."""
+        import uuid
+
         path = path or self.path
         if not path:
             raise ValueError("PersistentCache.save: no path configured")
+        if self.path == path:
+            self.refresh()
         self.path = path
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with self._lock:
-            payload = {"schema": SCHEMA_VERSION,
-                       "fingerprint": FINGERPRINT_VERSION,
-                       "entries": dict(self.entries)}
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                    prefix=".cache-", suffix=".tmp")
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f)
-            os.replace(tmp, path)
+            with self._lock:
+                self._gen = uuid.uuid4().hex
+                with os.fdopen(fd, "w") as f:
+                    f.write(json.dumps(
+                        {"schema": SCHEMA_VERSION,
+                         "fingerprint": FINGERPRINT_VERSION,
+                         "gen": self._gen}) + "\n")
+                    for k, v in self.entries.items():
+                        f.write(json.dumps(
+                            {"k": k, "v": v, "c": self.costs.get(k, 0.0)},
+                            separators=(",", ":")) + "\n")
+                os.replace(tmp, path)
+                self._offset = os.path.getsize(path)
+                self._header_ok = True
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
@@ -149,9 +356,13 @@ class CachedEstimator(ComputeEstimator):
 
     ``store`` may be a plain dict shared between several CachedEstimator
     instances (the campaign runner's in-process mode) or a
-    :class:`PersistentCache` (cross-run mode).  ``new_entries`` records the
-    keys this instance computed itself, so a parallel worker can ship only
-    its fresh results back to the coordinating process.
+    :class:`PersistentCache` (cross-run / cross-process mode).  With a
+    path-backed PersistentCache, misses are written through to the shared
+    log immediately and lookups that miss in memory first tail the log —
+    so a concurrent process's fresh entries become hits here mid-run.
+    ``new_entries`` records ``key -> (value, cost)`` for the keys this
+    instance computed itself, so a parallel worker can ship only its
+    fresh results back to the coordinating process.
     """
 
     def __init__(self, inner: ComputeEstimator,
@@ -163,7 +374,7 @@ class CachedEstimator(ComputeEstimator):
         self.persist_path = persist_path
         self.stats = CacheStats()
         self._lock = threading.Lock()
-        self.new_entries: dict[str, float] = {}
+        self.new_entries: dict[str, tuple[float, float]] = {}
         if store is not None:
             self._mem = store
         elif persist_path:
@@ -172,8 +383,19 @@ class CachedEstimator(ComputeEstimator):
             self._mem = {}
 
     def _key(self, region: ComputeRegion) -> str:
+        """The (H, C, config, R) cache key for ``region``."""
         return (f"{self.inner.cache_hw_key}|{self.inner.toolchain}"
                 f"|{self.inner.cache_config_key}|{region.fingerprint}")
+
+    def _hit_cost(self, key: str) -> float:
+        """Evaluation cost avoided by a hit on ``key``: measured locally
+        if this instance computed it, else the store's persisted cost."""
+        local = self.stats.per_key_cost.get(key)
+        if local is not None:
+            return local
+        if isinstance(self._mem, PersistentCache):
+            return self._mem.cost(key)
+        return 0.0
 
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         import time
@@ -181,14 +403,26 @@ class CachedEstimator(ComputeEstimator):
         with self._lock:
             if key in self._mem:
                 self.stats.hits += 1
-                self.stats.saved_seconds += self.stats.per_key_cost.get(key, 0.0)
+                self.stats.saved_seconds += self._hit_cost(key)
                 return self._mem[key]
+        # miss in memory: a concurrent process may have evaluated the key
+        # since our last look at the shared log — tail it before paying
+        if isinstance(self._mem, PersistentCache) and self._mem.path:
+            self._mem.refresh()
+            with self._lock:
+                if key in self._mem:
+                    self.stats.hits += 1
+                    self.stats.saved_seconds += self._hit_cost(key)
+                    return self._mem[key]
         t0 = time.perf_counter()
         value = self.inner.get_run_time_estimate(region)
         dt = time.perf_counter() - t0
         with self._lock:
-            self._mem[key] = value
-            self.new_entries[key] = value
+            if isinstance(self._mem, PersistentCache):
+                self._mem.append(key, value, cost=dt)
+            else:
+                self._mem[key] = value
+            self.new_entries[key] = (value, dt)
             self.stats.misses += 1
             self.stats.miss_cost_seconds += dt
             self.stats.per_key_cost[key] = dt
@@ -198,6 +432,7 @@ class CachedEstimator(ComputeEstimator):
         return self.inner.supports(region)
 
     def flush(self) -> None:
+        """Persist the store to ``persist_path`` (no-op without one)."""
         if not self.persist_path:
             return
         if isinstance(self._mem, PersistentCache):

@@ -99,6 +99,8 @@ class ProfilingEstimator(ComputeEstimator):
             dl = DeviceList(tuple(backend.devices()[:1]))
             return compiler.backend_compile_and_load(
                 backend, module, dl, opts, [])
+        # 0.4.x compat shim: drop this branch (keep only
+        # backend_compile_and_load) when the jax floor moves to >= 0.6
         return compiler.backend_compile(backend, module, opts, [])
 
     def get_run_time_estimate(self, region: ComputeRegion) -> float:

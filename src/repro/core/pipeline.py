@@ -54,7 +54,9 @@ def export_workload(jitted, *specs, name: str = "workload",
         w.hlo_text = compiled.as_text()
         try:
             ca = compiled.cost_analysis()
-            # jax <= 0.4.x returns a one-element list of dicts
+            # jax <= 0.4.x returns a one-element list of dicts.
+            # 0.4.x compat shim: drop the list handling when the jax
+            # floor moves to >= 0.6
             if isinstance(ca, (list, tuple)):
                 ca = ca[0] if ca else {}
             w.meta["cost_analysis"] = dict(ca or {})
@@ -110,6 +112,8 @@ class Prediction:
             row["cache_hits"] = self.cache_stats.hits
             row["cache_misses"] = self.cache_stats.misses
             row["cache_hit_rate"] = self.cache_stats.hit_rate
+            row["cache_saved_s"] = self.cache_stats.saved_seconds
+            row["cache_miss_cost_s"] = self.cache_stats.miss_cost_seconds
         return row
 
 

@@ -27,38 +27,12 @@ import jax.numpy as jnp
 
 
 def _opt_state_abstract(specs, opt_name, mesh, rules):
-    """ShapeDtypeStructs (sharded) for the optimizer state, from ParamSpecs.
+    """Back-compat alias; the implementation lives in
+    :func:`repro.train.optimizer.opt_state_abstract` (import that instead —
+    importing this module forces a 512-device XLA host platform)."""
+    from repro.train.optimizer import opt_state_abstract
 
-    Moments inherit the parameter sharding (fully sharded optimizer);
-    adafactor's factored moments drop the corresponding axes."""
-    from repro.distributed.sharding import param_sharding
-    from repro.models.params import ParamSpec, is_spec
-
-    def like(spec: ParamSpec, dtype="float32"):
-        return jax.ShapeDtypeStruct(
-            spec.shape, jnp.dtype(dtype),
-            sharding=param_sharding(spec.axes, mesh, rules, spec.shape))
-
-    step = jax.ShapeDtypeStruct((), jnp.int32)
-    if opt_name == "adamw":
-        return {
-            "step": step,
-            "m": jax.tree.map(like, specs, is_leaf=is_spec),
-            "v": jax.tree.map(like, specs, is_leaf=is_spec),
-        }
-    # adafactor
-    def fac(spec: ParamSpec):
-        if len(spec.shape) >= 2 and spec.shape[-1] >= 128 \
-                and spec.shape[-2] >= 128:
-            vr = ParamSpec(spec.shape[:-1], spec.axes[:-1], dtype="float32")
-            vc = ParamSpec((*spec.shape[:-2], spec.shape[-1]),
-                           (*spec.axes[:-2], spec.axes[-1]),
-                           dtype="float32")
-            return {"vr": like(vr), "vc": like(vc)}
-        return {"v": like(spec)}
-
-    return {"step": step,
-            "v": jax.tree.map(fac, specs, is_leaf=is_spec)}
+    return opt_state_abstract(specs, opt_name, mesh, rules)
 
 
 def build_step(arch: str, shape_name: str, mesh, *, opt_name: str,

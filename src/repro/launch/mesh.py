@@ -16,7 +16,9 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (smoke tests use (1, 1); benches use host devices)."""
-    # axis_types only exists from jax 0.5; Auto is the default there anyway
+    # axis_types only exists from jax 0.5; Auto is the default there anyway.
+    # 0.4.x compat shim: collapse to the axis_types call unconditionally
+    # when the jax floor moves to >= 0.6
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
             shape, axes,

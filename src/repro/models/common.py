@@ -36,7 +36,10 @@ def barrier(x):
     jax < 0.5 has no differentiation rule for the primitive; this wrapper
     barriers both the primal and the cotangents, which is what newer jax
     does natively — per-layer region boundaries survive in both the
-    forward and backward segments of the export."""
+    forward and backward segments of the export.
+
+    0.4.x compat shim: retire (use jax.lax.optimization_barrier directly)
+    when the repo's jax floor moves to >= 0.6."""
     return jax.lax.optimization_barrier(x)
 
 

@@ -139,3 +139,57 @@ def resnet_forward(cfg: ResNetConfig, params: dict, images: jax.Array,
     lse = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return jnp.mean(lse - gold), logits
+
+
+def resnet_arch_config(arch: str) -> ResNetConfig:
+    """``"resnet50"`` -> :class:`ResNetConfig` (campaign ``arch`` ids)."""
+    if not arch.startswith("resnet"):
+        raise ValueError(f"not a resnet arch id: {arch!r}")
+    suffix = arch[len("resnet"):]
+    if not suffix.isdigit() or int(suffix) not in _STAGES:
+        raise ValueError(
+            f"unknown resnet depth in {arch!r}; have {sorted(_STAGES)}")
+    return ResNetConfig(depth=int(suffix))
+
+
+def resnet_train_exports(cfg: ResNetConfig, batch: int, img: int, mesh=None,
+                         opt_cfg=None):
+    """Jitted ResNet train step + abstract args for workload export.
+
+    Data-parallel fig-7 configuration: loss + grad + optimizer update
+    (AdamW by default; any :class:`OptimizerConfig`), FP16 images sharded
+    over the mesh "data" axis.  Shared by the fig7 benchmark loop and
+    the campaign engine's ``mode="train"`` resnet export, so both
+    produce the identical StableHLO/HLO pair.
+
+    Returns ``(jitted_step, (params_abs, opt_abs, images_abs, labels_abs))``.
+    """
+    from ..distributed.sharding import act_sharding
+    from ..models.params import abstract_params
+    from ..train.optimizer import (OptimizerConfig, make_optimizer,
+                                   opt_state_abstract)
+
+    specs = resnet_specs(cfg)
+    opt_cfg = opt_cfg or OptimizerConfig(name="adamw")
+    _, update_fn = make_optimizer(opt_cfg)
+
+    def step(params, opt, images, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: resnet_forward(cfg, p, images, labels)[0])(params)
+        params, opt, _ = update_fn(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    jitted = jax.jit(step, donate_argnums=(0, 1))
+    params_abs = abstract_params(specs, mesh)
+    if mesh is None:
+        imgs = jax.ShapeDtypeStruct((batch, img, img, 3), jnp.float16)
+        lbls = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        img_sh = act_sharding(("batch", "seq", "seq", "embed"), mesh, None,
+                              (batch, img, img, 3))
+        lbl_sh = act_sharding(("batch",), mesh, None, (batch,))
+        imgs = jax.ShapeDtypeStruct((batch, img, img, 3), jnp.float16,
+                                    sharding=img_sh)
+        lbls = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=lbl_sh)
+    opt_abs = opt_state_abstract(specs, opt_cfg.name, mesh, None)
+    return jitted, (params_abs, opt_abs, imgs, lbls)

@@ -80,6 +80,41 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
     return train_step
 
 
+def train_step_exports(cfg: ModelConfig, seq: int, batch: int, mesh=None,
+                       *, rules: ShardingRules | None = None,
+                       opt_cfg: OptimizerConfig | None = None,
+                       name: str = "bench"):
+    """Jitted full train step + abstract (sharded) args for workload export.
+
+    The export-side twin of :func:`train`: builds
+    ``train_step(params, opt_state, batch)`` — loss + grad + optimizer
+    update — and the zero-allocation ShapeDtypeStruct stand-ins for every
+    argument (parameters, optimizer state via
+    :func:`~repro.train.optimizer.opt_state_abstract`, and the token
+    batch), all carrying mesh shardings when ``mesh`` is given.  This is
+    the single source the fig6/fig9/fig11 benchmarks and the campaign
+    engine's ``mode="train"`` spec export share, so a campaign prediction
+    is bit-identical to a hand-rolled sweep over the same step.
+
+    Returns ``(jitted_step, (params_abs, opt_abs, batch_abs))`` ready for
+    :func:`repro.core.pipeline.export_workload`.
+    """
+    from ..configs.base import ShapeConfig
+    from ..models.registry import input_specs
+    from .optimizer import opt_state_abstract
+
+    rules = rules or ShardingRules()
+    opt_cfg = opt_cfg or OptimizerConfig()
+    specs = model_specs(cfg)
+    shape = ShapeConfig(name, seq, batch, "train")
+    params_abs = abstract_params(specs, mesh, rules)
+    batch_abs = input_specs(cfg, shape, mesh, rules)
+    opt_abs = opt_state_abstract(specs, opt_cfg.name, mesh, rules)
+    step = make_train_step(cfg, opt_cfg)
+    jitted = jax.jit(step, donate_argnums=(0, 1))
+    return jitted, (params_abs, opt_abs, batch_abs)
+
+
 @dataclass
 class TrainResult:
     steps: int

@@ -47,6 +47,46 @@ def clip_by_global_norm(grads, max_norm: float):
                                    ).astype(g.dtype), grads), norm
 
 
+def opt_state_abstract(specs, opt_name: str, mesh=None, rules=None):
+    """ShapeDtypeStructs (sharded) for the optimizer state, from ParamSpecs.
+
+    The zero-allocation twin of ``adamw_init``/``adafactor_init`` used to
+    *lower* a train step without materializing state (dry-runs, workload
+    export).  Moments inherit the parameter sharding (fully sharded
+    optimizer); adafactor's factored moments drop the corresponding axes.
+    """
+    from ..distributed.sharding import param_sharding
+    from ..models.params import ParamSpec, is_spec
+
+    def like(spec: ParamSpec, dtype="float32"):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, jnp.dtype(dtype))
+        return jax.ShapeDtypeStruct(
+            spec.shape, jnp.dtype(dtype),
+            sharding=param_sharding(spec.axes, mesh, rules, spec.shape))
+
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    if opt_name == "adamw":
+        return {
+            "step": step,
+            "m": jax.tree.map(like, specs, is_leaf=is_spec),
+            "v": jax.tree.map(like, specs, is_leaf=is_spec),
+        }
+    # adafactor
+    def fac(spec: ParamSpec):
+        if len(spec.shape) >= 2 and spec.shape[-1] >= 128 \
+                and spec.shape[-2] >= 128:
+            vr = ParamSpec(spec.shape[:-1], spec.axes[:-1], dtype="float32")
+            vc = ParamSpec((*spec.shape[:-2], spec.shape[-1]),
+                           (*spec.axes[:-2], spec.axes[-1]),
+                           dtype="float32")
+            return {"vr": like(vr), "vc": like(vc)}
+        return {"v": like(spec)}
+
+    return {"step": step,
+            "v": jax.tree.map(fac, specs, is_leaf=is_spec)}
+
+
 # --------------------------------------------------------------------------
 # AdamW
 # --------------------------------------------------------------------------

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links in README.md and docs/*.md.
+
+Checks every ``[text](target)`` whose target is a relative path (external
+URLs and pure anchors are skipped): the referenced file or directory must
+exist relative to the markdown file.  Used by the CI docs job and by
+``tests/test_docs.py``.
+
+Usage::
+
+    python tools/check_links.py [file-or-dir ...]   # default: README.md docs
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links, excluding images; target up to the first ')' or '#'
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def links_in(path: str) -> list[tuple[int, str]]:
+    """(line_number, target) for every link in a markdown file,
+    skipping fenced code blocks."""
+    out: list[tuple[int, str]] = []
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _CODE_FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(line):
+                out.append((lineno, m.group(1)))
+    return out
+
+
+def is_external(target: str) -> bool:
+    return target.startswith(("http://", "https://", "mailto:", "#"))
+
+
+def check_file(path: str) -> list[str]:
+    """Human-readable error strings for every broken link in ``path``."""
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in links_in(path):
+        if is_external(target):
+            continue
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def collect(paths: list[str]) -> list[str]:
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(
+                os.path.join(p, f) for f in os.listdir(p)
+                if f.endswith(".md")))
+        elif p.endswith(".md"):
+            files.append(p)
+    return files
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    files = collect(paths)
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
