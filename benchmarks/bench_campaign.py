@@ -1,0 +1,162 @@
+"""Campaign-engine performance: plan reuse, batched cache ops, scheduling.
+
+Runs a synthetic GEMM grid (no jax needed) through the campaign engine
+under all three executors and measures the per-*workload* costs the plan
+phase amortizes:
+
+  * wall time per executor;
+  * parse/slice calls vs the per-job baseline (pre-plan engines pay one
+    parse + one slice per grid point; the plan store pays one per
+    ``(workload, fidelity)`` / per plan key);
+  * persistent-cache flock round-trips, batched (one ``put_many`` per
+    evaluate phase) vs per-region (one append per miss + tail-reads);
+  * duplicate cold misses under parallel executors (the locality
+    schedule's leader-first chains must make these zero).
+
+Emits ``BENCH_campaign.json`` at the repo root (the perf-trajectory
+artifact) plus the usual CSV under ``artifacts/bench/``.
+"""
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+from benchmarks.common import emit  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: stacked-GEMM workload: distinct shapes -> distinct fingerprints, one
+#: region per GEMM under the linear slicer.  200 + 48·i is deliberately
+#: disjoint from the single-GEMM grid sizes (512/1024/2048/4096): a
+#: shared fingerprint would put two *different* locality chains in a
+#: race for the same cache key, making the zero-duplicate-cold-miss
+#: assertion below timing-dependent.
+STACK_SHAPES = [(200 + 48 * i, 200 + 48 * i, 200 + 48 * i)
+                for i in range(24)]
+
+
+def _grid_spec():
+    from repro.campaign import CampaignSpec
+    workloads = [{"name": f"gemm-{n}", "fidelity": "raw",
+                  "gemm": {"m": n, "n": n, "k": n, "dtype": "bf16"}}
+                 for n in (512, 1024, 2048, 4096)]
+    workloads.append({"name": "gemm-stack", "fidelity": "raw",
+                      "stablehlo_path": "in-memory"})
+    return CampaignSpec.from_dict({
+        "name": "bench-campaign",
+        "workloads": workloads,
+        "systems": ["a100", "h100", "b200", "tpu-v3"],
+        "estimators": [{"kind": "roofline"},
+                       {"kind": "roofline", "options": {"mode": "per-op"}}],
+        "slicers": ["linear", "dep"],
+        "topologies": [{"kind": "a2a", "params": {"num_devices": 4}}],
+    })
+
+
+def _run_grid(executor: str, workloads: dict) -> dict:
+    from repro.campaign import run_campaign
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        res = run_campaign(_grid_spec(), workloads=workloads,
+                           executor=executor, max_workers=4,
+                           cache_path=os.path.join(d, "hcr.jsonl"))
+        wall = time.perf_counter() - t0
+    assert res.summary["num_failed"] == 0, res.summary["failures"]
+    return {
+        "wall_s": round(wall, 4),
+        "jobs": res.plans["jobs"],
+        "plan_keys": res.plans["plan_keys"],
+        "parse_calls": res.plans["parse_calls"],
+        "plans_built": res.plans["plans_built"],
+        "cache_hits": res.cache["hits"],
+        "cache_misses": res.cache["misses"],
+        "lock_roundtrips": res.cache["lock_roundtrips"],
+    }
+
+
+def _cache_op_comparison(workloads: dict) -> dict:
+    """Per-region vs batched store traffic for one multi-region workload
+    evaluated over several systems (fresh path-backed store each)."""
+    from repro.campaign.builders import build_estimator, build_topology
+    from repro.campaign.spec import EstimatorSpec, TopologySpec
+    from repro.core.estimators.cache import PersistentCache
+    from repro.core.pipeline import PredictionJob, build_plan
+    from repro.core.systems import get_system
+
+    program = workloads["gemm-stack"].program("raw")
+    plan = build_plan(program, slicer="linear", name="gemm-stack")
+    out = {"regions": len(plan.compute_regions),
+           "fingerprints": len(plan.fingerprints)}
+    for batched in (False, True):
+        with tempfile.TemporaryDirectory() as d:
+            store = PersistentCache(os.path.join(d, "hcr.jsonl"))
+            t0 = time.perf_counter()
+            for sysname in ("a100", "h100", "b200", "tpu-v3"):
+                system = get_system(sysname)
+                est = build_estimator(EstimatorSpec(), system)
+                topo = build_topology(
+                    TopologySpec("a2a", (("num_devices", 4),)), system)
+                PredictionJob(estimator=est, topology=topo, plan=plan,
+                              name="gemm-stack", cache_store=store,
+                              batch_cache=batched).run()
+            key = "batched" if batched else "per_region"
+            out[f"{key}_lock_roundtrips"] = store.lock_roundtrips
+            out[f"{key}_wall_s"] = round(time.perf_counter() - t0, 4)
+    out["lock_roundtrip_ratio"] = round(
+        out["per_region_lock_roundtrips"]
+        / max(out["batched_lock_roundtrips"], 1), 1)
+    return out
+
+
+def main() -> None:
+    from repro.campaign.builders import synthesize_gemm_stack
+    from repro.core.pipeline import Workload
+
+    workloads = {"gemm-stack": Workload(
+        name="gemm-stack",
+        stablehlo_text=synthesize_gemm_stack(STACK_SHAPES))}
+
+    executors = {ex: _run_grid(ex, workloads)
+                 for ex in ("serial", "thread", "process")}
+    serial_misses = executors["serial"]["cache_misses"]
+    duplicate_cold_misses = {
+        ex: r["cache_misses"] - serial_misses for ex, r in executors.items()}
+
+    jobs = executors["serial"]["jobs"]
+    report = {
+        "bench": "campaign-engine",
+        "grid": {"jobs": jobs,
+                 "plan_keys": executors["serial"]["plan_keys"],
+                 "distinct_cache_keys": serial_misses},
+        "executors": executors,
+        # what a per-job engine (no plan sharing) would pay: one parse
+        # and one slice per grid point
+        "per_job_baseline": {"parse_calls": jobs, "plans_built": jobs},
+        "parse_call_ratio": round(
+            jobs / max(executors["serial"]["parse_calls"], 1), 1),
+        "slice_call_ratio": round(
+            jobs / max(executors["serial"]["plans_built"], 1), 1),
+        "cache_ops": _cache_op_comparison(workloads),
+        "duplicate_cold_misses": duplicate_cold_misses,
+    }
+    path = os.path.join(REPO, "BENCH_campaign.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {path}")
+
+    rows = [{"name": f"campaign-{ex}", "us_per_call": r["wall_s"] * 1e6,
+             **{k: v for k, v in r.items() if k != "wall_s"}}
+            for ex, r in executors.items()]
+    rows.append({"name": "campaign-cache-ops", "us_per_call": "",
+                 **report["cache_ops"]})
+    emit(rows, "bench_campaign")
+
+    assert report["parse_call_ratio"] >= 2, report
+    assert report["cache_ops"]["lock_roundtrip_ratio"] >= 5, report
+    assert all(v == 0 for v in duplicate_cold_misses.values()), report
+
+
+if __name__ == "__main__":
+    main()

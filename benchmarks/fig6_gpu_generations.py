@@ -46,11 +46,15 @@ def main() -> None:
                              link_bw=host.interconnect.link_bw,
                              link_latency=2e-6)
     mesh1 = make_mesh((1, 1), ("data", "model"))
-    for arch, seq, batch in [("llama3-100m", 256, 2)]:
+    # 4 layers instead of the arch's 12: host-CPU measurement of the
+    # full-size step is ~26-36 s/step and the estimator-ordering outcome
+    # is identical — the per-layer GEMM shapes (what the estimators
+    # actually cost) are unchanged, only the layer count shrinks
+    for arch, seq, batch, layers in [("llama3-100m", 256, 2, 4)]:
         cfg, jitted, abs_args, concrete = build_llama_step(
             arch, seq, batch, mesh1, train=True,
             cfg_overrides={"scan_layers": False, "layer_barriers": True,
-                           "remat": "none"})
+                           "remat": "none", "num_layers": layers})
         with mesh1:
             w = export_workload(jitted, *abs_args, name=arch)
             measured = measure(jitted, concrete(jax.random.PRNGKey(0)),

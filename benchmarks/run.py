@@ -24,6 +24,7 @@ FIGURES = {
     "fig11": "fig11_tpu",
     "caching": "caching_exp",
     "micro": "micro_bench",
+    "campaign": "bench_campaign",
 }
 
 

@@ -133,6 +133,13 @@ def main(argv: list[str] | None = None) -> int:
         ap.add_argument("--jobs", type=int, default=None,
                         help="max parallel workers (default: executor's "
                              "choice)")
+        ap.add_argument("--schedule", default="locality",
+                        choices=("locality", "grid"),
+                        help="job ordering: 'locality' groups jobs by "
+                             "shared plan/cache keyset (leader first, "
+                             "fingerprint-heavy plans warm the cache "
+                             "early); 'grid' is pure grid order "
+                             "(default: locality)")
         ap.add_argument("--cache", default=None, metavar="PATH",
                         help="persistent (H,C,R) cache file shared across "
                              "runs and live workers")
@@ -178,7 +185,7 @@ def main(argv: list[str] | None = None) -> int:
         result = run_campaign(
             spec, out_dir=out_dir, executor=args.executor,
             max_workers=args.jobs, cache_path=args.cache,
-            progress=not args.quiet)
+            schedule=args.schedule, progress=not args.quiet)
         print(format_table(result.summary))
         if result.csv_path:
             print(f"  wrote {result.jsonl_path}, {result.csv_path}, "

@@ -121,6 +121,36 @@ def _synthesize_gemm(spec: WorkloadSpec) -> Workload:
                     meta={"gemm": {"m": m, "n": n, "k": k, "dtype": dt}})
 
 
+def synthesize_gemm_stack(shapes: list[tuple[int, int, int]]) -> str:
+    """A StableHLO module of independent ``dot_general``s separated by
+    ``optimization_barrier``s — one compute region per GEMM under the
+    linear slicer, written directly as MLIR text (no jax needed).
+
+    The multi-region sibling of :func:`_synthesize_gemm`; benchmarks and
+    tests use it to exercise plan reuse and batched cache traffic on
+    workloads with many distinct fingerprints."""
+    args, body = [], []
+    v = 0
+    for i, (m, n, k) in enumerate(shapes):
+        lhs, rhs, out = f"{m}x{k}xbf16", f"{k}x{n}xbf16", f"{m}x{n}xbf16"
+        args += [f"%arg{2 * i}: tensor<{lhs}>",
+                 f"%arg{2 * i + 1}: tensor<{rhs}>"]
+        body.append(
+            f"    %{v} = stablehlo.dot_general %arg{2 * i}, "
+            f"%arg{2 * i + 1}, contracting_dims = [1] x [0], "
+            f"precision = [DEFAULT, DEFAULT] : "
+            f"(tensor<{lhs}>, tensor<{rhs}>) -> tensor<{out}>")
+        v += 1
+        body.append(f"    %{v} = stablehlo.optimization_barrier "
+                    f"%{v - 1} : tensor<{out}>")
+        v += 1
+    m, n, _ = shapes[-1]
+    return ("module @gemm_stack {\n"
+            f"  func.func public @main({', '.join(args)}) -> "
+            f"tensor<{m}x{n}xbf16> {{\n" + "\n".join(body) +
+            f"\n    return %{v - 1} : tensor<{m}x{n}xbf16>\n  }}\n}}\n")
+
+
 def _mesh_for(spec: WorkloadSpec):
     """Build the spec's device mesh (None when the spec has none)."""
     if spec.mesh is None:

@@ -1,17 +1,36 @@
-"""Campaign execution: expand the grid, run jobs in parallel, stream
-results, share one persistent (H, C, R) cache across all of it.
+"""Campaign execution: expand the grid, plan once per workload, run jobs
+in parallel, stream results, share one persistent (H, C, R) cache.
+
+Execution is **plan-based**: every ``(workload, fidelity, slicer)`` is
+parsed and sliced exactly once (a :class:`~repro.core.pipeline.PredictionPlan`
+built by the :class:`~repro.campaign.plans.PlanStore`), and each grid
+point only runs the cheap evaluate phase against its shared plan — with
+all region latencies fetched in one batched cache operation.
 
 Executors:
 
-  * ``serial``  — in-process, deterministic order;
+  * ``serial``  — in-process, deterministic schedule order;
   * ``thread``  — ThreadPoolExecutor; jobs share one live cache store, so a
     fingerprint evaluated by one job is a hit for every later job;
-  * ``process`` — ProcessPoolExecutor.  With a ``cache_path``, every
-    worker opens the same file-locked append-log store: misses are
-    written through immediately and lookups tail the log, so workers
-    observe each other's fresh entries *mid-campaign*.  Without a path,
-    each worker falls back to a startup snapshot and ships its fresh
-    entries back for the parent to merge.
+  * ``process`` — ProcessPoolExecutor.  Workers receive pickled *plan
+    files* (never raw workload text) and unpickle only the plans their
+    jobs reference.  With a ``cache_path``, every worker opens the same
+    file-locked append-log store: misses are written through immediately
+    and lookups tail the log, so workers observe each other's fresh
+    entries *mid-campaign*.  Without a path, each worker falls back to a
+    startup snapshot, ships its fresh entries back for the parent to
+    merge, and chain siblings are warmed with their leader's entries.
+
+Schedules (``schedule=``):
+
+  * ``locality`` (default) — jobs are grouped into *cache chains*
+    (identical (H, C, R) keysets: same plan + system + estimator); each
+    chain's leader runs before its siblings are released, so parallel
+    executors never duplicate a cold miss, and chains are ordered
+    fingerprint-heavy-first so expensive workloads warm the shared cache
+    before cheap ones;
+  * ``grid``  — pure grid order, all jobs released at once (the legacy
+    behavior).
 
 Results stream to ``results.jsonl`` as jobs finish (crash-safe: a killed
 campaign keeps everything completed so far), then consolidate into
@@ -24,70 +43,42 @@ import json
 import os
 import threading
 import time
-from concurrent.futures import (FIRST_COMPLETED, ProcessPoolExecutor,
-                                ThreadPoolExecutor, wait)
+from concurrent.futures import (FIRST_COMPLETED, Executor,
+                                ProcessPoolExecutor, ThreadPoolExecutor,
+                                wait)
 from dataclasses import dataclass, field
 
 from ..core.estimators.cache import PersistentCache
-from ..core.pipeline import PredictionJob, Workload
+from ..core.pipeline import PredictionJob, PredictionPlan, Workload
 from .builders import (build_estimator, build_system, build_topology,
                        build_workload)
+from .plans import PlanStore
 from .spec import CampaignSpec, JobSpec
 from .summary import summarize
 
 EXECUTORS = ("serial", "thread", "process")
+SCHEDULES = ("locality", "grid")
 
 # -------------------------- single-job execution --------------------------
 
 
-def _program_for(job: JobSpec, texts: dict, programs: dict,
-                 lock: threading.Lock | None = None):
-    """Parse (memoized) the right fidelity of the job's workload.
-
-    Returns (program, effective_fidelity) — the fidelity actually used,
-    which falls back optimized -> raw when no optimized HLO exists."""
-    from ..core.ir.parser import parse
-
-    wtexts = texts[job.workload]
-    fidelity = job.fidelity
-    if fidelity == "optimized" and not wtexts.get("optimized"):
-        fidelity = "raw"
-    key = (job.workload, fidelity)
-
-    def lookup_or_parse():
-        if key not in programs:
-            text = wtexts.get(fidelity)
-            if text is None:
-                raise ValueError(
-                    f"workload {job.workload!r}: no {fidelity} text")
-            programs[key] = parse(text)
-        return programs[key]
-
-    if lock:
-        # parse under the lock: concurrent first jobs of a thread campaign
-        # would otherwise each pay the (expensive) parse of the same text
-        with lock:
-            return lookup_or_parse(), fidelity
-    return lookup_or_parse(), fidelity
-
-
-def _execute(job: JobSpec, texts: dict, programs: dict, store,
-             lock: threading.Lock | None = None) -> tuple[dict, dict]:
-    """Run one grid point; returns (result_row, freshly_computed_entries)."""
+def _execute(job: JobSpec, plan: PredictionPlan, store) -> tuple[dict, dict]:
+    """Evaluate one grid point against its shared plan; returns
+    (result_row, freshly_computed_entries)."""
     t0 = time.perf_counter()
-    program, fidelity = _program_for(job, texts, programs, lock)
     system = build_system(job.system)
     estimator = build_estimator(job.estimator, system,
-                                system_name=job.system, program=program)
+                                system_name=job.system, program=plan.program)
     topology = build_topology(job.topology, system)
     pjob = PredictionJob(
-        program=program, estimator=estimator, topology=topology,
+        estimator=estimator, topology=topology,
         slicer=job.slicer, overlap=job.overlap,
         straggler_factor=job.straggler_factor, compression=job.compression,
-        name=job.workload, system_name=system.name, cache_store=store)
+        name=job.workload, system_name=system.name, cache_store=store,
+        plan=plan)
     p = pjob.run()
     row = dict(job.to_row())
-    row["fidelity"] = fidelity  # the fidelity actually costed
+    row["fidelity"] = plan.fidelity  # the fidelity actually costed
     pred = p.to_row()
     row["toolchain"] = pred.pop("estimator")
     for k in ("workload", "system", "slicer"):
@@ -97,28 +88,48 @@ def _execute(job: JobSpec, texts: dict, programs: dict, store,
     return row, dict(pjob.cached.new_entries)
 
 
-# process-pool worker state (one store per worker process)
+# process-pool worker state (plans + store, one set per worker process)
 _WORKER: dict = {}
 
 
-def _worker_init(texts: dict, cache_entries: dict,
+def _worker_init(plan_paths: dict, cache_entries: dict,
                  cache_path: str | None = None) -> None:
-    """Per-worker setup.  With a ``cache_path`` the worker opens the
-    shared file-locked store — live view, write-through appends; without
-    one it degrades to a private snapshot of the parent's entries."""
-    _WORKER["texts"] = texts
-    _WORKER["programs"] = {}
+    """Per-worker setup.  ``plan_paths`` maps plan key -> pickled plan
+    file; a worker unpickles a plan the first time one of its jobs
+    references it (and never re-parses IR text).  With a ``cache_path``
+    the worker opens the shared file-locked store — live view,
+    write-through appends; without one it degrades to a private snapshot
+    of the parent's entries."""
+    _WORKER["plan_paths"] = dict(plan_paths)
+    _WORKER["plans"] = {}
     if cache_path:
         _WORKER["store"] = PersistentCache(cache_path)
     else:
         _WORKER["store"] = dict(cache_entries)
 
 
-def _worker_run(job: JobSpec) -> tuple[dict, dict]:
-    """Execute one job against this worker's store; returns the result
-    row plus the ``key -> (value, cost)`` entries it computed itself."""
-    return _execute(job, _WORKER["texts"], _WORKER["programs"],
-                    _WORKER["store"])
+def _worker_plan(key: tuple) -> PredictionPlan:
+    plan = _WORKER["plans"].get(key)
+    if plan is None:
+        plan = PlanStore.load_file(_WORKER["plan_paths"][key])
+        _WORKER["plans"][key] = plan
+    return plan
+
+
+def _worker_run(job: JobSpec, plan_key: tuple,
+                warm_entries: dict | None = None) -> tuple[dict, dict]:
+    """Execute one job against this worker's plan + store; returns the
+    result row plus the ``key -> (value, cost)`` entries it computed
+    itself.  ``warm_entries`` carries a chain leader's fresh entries into
+    snapshot-mode stores (path-backed stores see them via the log)."""
+    store = _WORKER["store"]
+    if warm_entries:
+        if isinstance(store, PersistentCache):
+            store.merge(warm_entries)
+        else:
+            store.update({k: v[0] if isinstance(v, (tuple, list)) else v
+                          for k, v in warm_entries.items()})
+    return _execute(job, _worker_plan(tuple(plan_key)), store)
 
 
 # ------------------------------ the campaign ------------------------------
@@ -128,7 +139,7 @@ def _worker_run(job: JobSpec) -> tuple[dict, dict]:
 class CampaignResult:
     """Everything a finished campaign produced: job_id-ordered result
     rows (error rows included), the summary dict, paths of any streamed
-    artifacts, wall time, and the cache report."""
+    artifacts, wall time, and the cache/plan reports."""
     name: str
     rows: list[dict]                 # job_id-ordered; error rows included
     summary: dict
@@ -137,6 +148,7 @@ class CampaignResult:
     summary_path: str | None = None
     wall_s: float = 0.0
     cache: dict = field(default_factory=dict)
+    plans: dict = field(default_factory=dict)
 
     @property
     def ok_rows(self) -> list[dict]:
@@ -160,24 +172,80 @@ def _workload_texts(spec: CampaignSpec,
     return texts
 
 
+def _build_plans(jobs: list[JobSpec],
+                 plans: PlanStore) -> tuple[dict, dict]:
+    """The campaign's plan phase: build every referenced plan exactly
+    once.  Returns (job_id -> plan key, plan key -> error string); jobs
+    whose plan failed to build become error rows instead of running."""
+    plan_keys: dict[int, tuple] = {}
+    plan_errors: dict[tuple, str] = {}
+    for job in jobs:
+        key = plans.key_for(job)
+        plan_keys[job.job_id] = key
+        if key in plan_errors:
+            continue
+        try:
+            plans.get(*key)
+        except Exception as e:  # noqa: BLE001 — keep the campaign going
+            plan_errors[key] = f"{type(e).__name__}: {e}"
+    return plan_keys, plan_errors
+
+
+def _schedule_chains(jobs: list[JobSpec], plan_keys: dict,
+                     plans: PlanStore, schedule: str) -> list[list[JobSpec]]:
+    """Order jobs into cache-affinity chains.
+
+    ``locality``: one chain per cache group (see
+    :meth:`JobSpec.cache_group` — jobs with identical (H, C, R) cache
+    keysets).  The leader (first job) runs before its siblings are
+    released, so a parallel executor cannot duplicate its cold misses;
+    chains are ordered fingerprint-heavy-first (ties broken by job_id) so
+    expensive plans warm the shared store before cheap ones.
+
+    ``grid``: singleton chains in grid order — every job released at
+    once, the pre-plan behavior.
+    """
+    if schedule == "grid":
+        return [[j] for j in jobs]
+    groups: dict[tuple, list[JobSpec]] = {}
+    for job in jobs:
+        # group by the exact cache keyset (fingerprint set, not plan
+        # key): the linear and dep plans of a single-region workload
+        # produce identical keys and must share a chain too
+        groups.setdefault(
+            job.cache_group(plans.fingerprint_set(plan_keys[job.job_id])),
+            []).append(job)
+    return sorted(
+        groups.values(),
+        key=lambda js: (-plans.weight(plan_keys[js[0].job_id]),
+                        js[0].job_id))
+
+
 def run_campaign(spec: CampaignSpec, *,
                  workloads: dict[str, Workload] | None = None,
                  out_dir: str | None = None,
                  executor: str = "serial",
                  max_workers: int | None = None,
                  cache_path: str | None = None,
+                 schedule: str = "locality",
                  progress: bool = False) -> CampaignResult:
-    """Expand ``spec`` into jobs, run them, and collect/stream results.
+    """Expand ``spec`` into jobs, plan, run them, and collect/stream
+    results.
 
     ``workloads`` supplies in-memory :class:`Workload` objects by name
     (anything else is materialized from its spec — file read, jax
-    export, or GEMM synthesis).  ``cache_path`` points every job — and,
-    under the process executor, every live worker — at one shared
-    append-log (H, C, R) store; the log is compacted once on completion
-    and the returned ``cache`` report includes the across-run
-    ``time_saving_fraction`` from persisted per-key costs."""
+    export, or GEMM synthesis).  Every ``(workload, fidelity, slicer)``
+    is parsed + sliced once into a shared plan; ``schedule`` orders the
+    jobs over those plans (``locality`` default, ``grid`` legacy).
+    ``cache_path`` points every job — and, under the process executor,
+    every live worker — at one shared append-log (H, C, R) store; the
+    log is compacted once on completion and the returned ``cache``
+    report includes the across-run ``time_saving_fraction`` from
+    persisted per-key costs."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
     t0 = time.perf_counter()
     spec.validate(provided=set(workloads or {}))
     jobs = spec.expand()
@@ -185,6 +253,9 @@ def run_campaign(spec: CampaignSpec, *,
 
     cache = PersistentCache(cache_path) if cache_path else PersistentCache()
     loaded = cache.loaded_entries
+
+    plans = PlanStore(texts)
+    plan_keys, plan_errors = _build_plans(jobs, plans)
 
     jsonl_path = None
     jsonl_file = None
@@ -210,13 +281,26 @@ def run_campaign(spec: CampaignSpec, *,
     rows: list[dict] = []
     new_entry_count = 0
     try:
+        # jobs whose plan could not be built fail up front, as rows
+        for job in jobs:
+            err = plan_errors.get(plan_keys[job.job_id])
+            if err is not None:
+                row = dict(job.to_row())
+                row["error"] = err
+                rows.append(row)
+                emit_row(row)
+        runnable = [j for j in jobs
+                    if plan_keys[j.job_id] not in plan_errors]
+        chains = _schedule_chains(runnable, plan_keys, plans, schedule)
         if executor == "process":
-            rows, new_entry_count = _run_process_pool(
-                jobs, texts, cache, max_workers, emit_row)
+            prows, new_entry_count = _run_process_pool(
+                chains, plan_keys, plans, cache, max_workers, emit_row,
+                out_dir)
         else:
-            rows, new_entry_count = _run_in_process(
-                jobs, texts, cache, emit_row,
+            prows, new_entry_count = _run_in_process(
+                chains, plan_keys, plans, cache, emit_row,
                 max_workers if executor == "thread" else 0)
+        rows.extend(prows)
     finally:
         if jsonl_file:
             jsonl_file.close()
@@ -246,10 +330,21 @@ def run_campaign(spec: CampaignSpec, *,
         "miss_cost_seconds": miss_cost,
         "time_saving_fraction": saved / (saved + miss_cost)
         if (saved + miss_cost) > 0 else 0.0,
+        # parent-side flock acquisitions (load/refresh/append/compact)
+        "lock_roundtrips": cache.lock_roundtrips,
+    }
+    plan_report = {
+        "schedule": schedule,
+        "jobs": len(jobs),
+        "plan_keys": len({plan_keys[j.job_id] for j in jobs}),
+        "parse_calls": plans.parse_count,
+        "plans_built": plans.plans_built,
+        "plan_errors": len(plan_errors),
     }
     summary = summarize(spec.name, rows)
     summary["wall_s"] = wall
     summary["cache"] = cache_report
+    summary["plans"] = plan_report
 
     csv_path = summary_path = None
     if out_dir:
@@ -262,22 +357,27 @@ def run_campaign(spec: CampaignSpec, *,
     return CampaignResult(
         name=spec.name, rows=rows, summary=summary, jsonl_path=jsonl_path,
         csv_path=csv_path, summary_path=summary_path, wall_s=wall,
-        cache=cache_report)
+        cache=cache_report, plans=plan_report)
 
 
-def _run_in_process(jobs: list[JobSpec], texts: dict, cache: PersistentCache,
+def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
+                    plans: PlanStore, cache: PersistentCache,
                     emit_row, thread_workers: int) -> tuple[list[dict], int]:
-    """Serial or thread-pool execution over one shared live cache store."""
-    programs: dict = {}
-    lock = threading.Lock()
+    """Serial or thread-pool execution over one shared live cache store.
+
+    Thread mode submits each chain's leader first and releases the
+    siblings only when it completes — by then every (H, C, R) key the
+    siblings need is in the shared store, so they are pure hits."""
     new_keys: set[str] = set()
     rows: list[dict] = []
     rows_lock = threading.Lock()
 
     def run_one(job: JobSpec) -> None:
         try:
-            row, new = _execute(job, texts, programs, cache, lock)
-            new_keys.update(new)
+            plan = plans.get(*plan_keys[job.job_id])
+            row, new = _execute(job, plan, cache)
+            with rows_lock:
+                new_keys.update(new)
         except Exception as e:  # noqa: BLE001 — keep the campaign going
             row = dict(job.to_row())
             row["error"] = f"{type(e).__name__}: {e}"
@@ -286,28 +386,53 @@ def _run_in_process(jobs: list[JobSpec], texts: dict, cache: PersistentCache,
         emit_row(row)
 
     if thread_workers == 0:
-        for job in jobs:
-            run_one(job)
+        for chain in chains:
+            for job in chain:
+                run_one(job)
     else:
         with ThreadPoolExecutor(max_workers=thread_workers) as pool:
-            futures = [pool.submit(run_one, j) for j in jobs]
-            wait(futures)
-            for f in futures:
-                f.result()
+            _drain_chains(pool, chains,
+                          submit=lambda job, lead: pool.submit(run_one, job))
     return rows, len(new_keys)
 
 
-def _run_process_pool(jobs: list[JobSpec], texts: dict,
-                      cache: PersistentCache, max_workers: int | None,
-                      emit_row) -> tuple[list[dict], int]:
-    """Process-pool execution.
+def _drain_chains(pool: Executor, chains: list[list[JobSpec]],
+                  submit, on_done=None) -> None:
+    """Leader-first chain draining: submit every chain's leader, release
+    its siblings (concurrently, as singleton chains) when it completes.
+    ``submit(job, leader_result)`` returns a future; ``on_done(chain,
+    future)`` observes each completion and returns the value handed to
+    the chain's siblings as ``leader_result``."""
+    pending = {}
+    for chain in chains:
+        pending[submit(chain[0], None)] = chain
+    while pending:
+        done, _ = wait(pending, return_when=FIRST_COMPLETED)
+        for fut in done:
+            chain = pending.pop(fut)
+            lead_result = on_done(chain, fut) if on_done else fut.result()
+            for sib in chain[1:]:
+                pending[submit(sib, lead_result)] = [sib]
 
-    With a path-backed cache the workers share the live append-log store
-    (see :func:`_worker_init`); fresh entries are additionally merged
-    into the parent for accounting.  Pathless caches fall back to
-    snapshot-out / merge-in."""
+
+def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
+                      plans: PlanStore, cache: PersistentCache,
+                      max_workers: int | None, emit_row,
+                      out_dir: str | None) -> tuple[list[dict], int]:
+    """Process-pool execution over pickled plan files.
+
+    Workers never see workload text: the parent dumps each built plan to
+    a file and ships only the (tiny) key -> path map at pool startup;
+    every job submission carries its plan key.  With a path-backed cache
+    the workers share the live append-log store (see
+    :func:`_worker_init`); fresh entries are additionally merged into the
+    parent for accounting.  Pathless caches fall back to snapshot-out /
+    merge-in, with chain siblings warmed by their leader's fresh entries
+    so they cannot duplicate its cold misses."""
     import multiprocessing
+    import shutil
     import sys
+    import tempfile
 
     # prefer spawn: the parent may hold live jax threads and fork of a
     # threaded process risks deadlock.  spawn re-imports __main__, which
@@ -322,15 +447,26 @@ def _run_process_pool(jobs: list[JobSpec], texts: dict,
     # path-backed workers open the shared store themselves — don't ship
     # them a (potentially large) snapshot they would never read
     snapshot = {} if cache.path else dict(cache.entries)
-    with ProcessPoolExecutor(
-            max_workers=max_workers, initializer=_worker_init,
-            initargs=(texts, snapshot, cache.path),
-            mp_context=multiprocessing.get_context(method)) as pool:
-        pending = {pool.submit(_worker_run, j): j for j in jobs}
-        while pending:
-            done, _ = wait(pending, return_when=FIRST_COMPLETED)
-            for fut in done:
-                job = pending.pop(fut)
+    plan_dir = (os.path.join(out_dir, "plans") if out_dir
+                else tempfile.mkdtemp(prefix="repro-plans-"))
+    try:
+        plan_paths = plans.dump(plan_dir)
+        with ProcessPoolExecutor(
+                max_workers=max_workers, initializer=_worker_init,
+                initargs=(plan_paths, snapshot, cache.path),
+                mp_context=multiprocessing.get_context(method)) as pool:
+
+            def submit(job: JobSpec, lead_entries):
+                # warm only snapshot-mode siblings: path-backed workers
+                # already observe the leader's entries via the log
+                warm = lead_entries if not cache.path else None
+                return pool.submit(_worker_run, job,
+                                   plan_keys[job.job_id], warm)
+
+            def on_done(chain, fut):
+                nonlocal new_total
+                job = chain[0]
+                new = {}
                 try:
                     row, new = fut.result()
                     new_total += cache.merge(new)
@@ -339,6 +475,12 @@ def _run_process_pool(jobs: list[JobSpec], texts: dict,
                     row["error"] = f"{type(e).__name__}: {e}"
                 rows.append(row)
                 emit_row(row)
+                return new
+
+            _drain_chains(pool, chains, submit=submit, on_done=on_done)
+    finally:
+        if not out_dir:
+            shutil.rmtree(plan_dir, ignore_errors=True)
     return rows, new_total
 
 

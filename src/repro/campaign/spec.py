@@ -209,6 +209,17 @@ class JobSpec:
             "compression": self.compression,
         }
 
+    def cache_group(self, regions_key) -> tuple:
+        """The identity under which jobs share an exact (H, C, R) cache
+        keyset: same regions R, same system (H), same estimator spec
+        (C + config).  ``regions_key`` is any hashable identity for R —
+        the runner passes the plan's fingerprint set, so two slicings
+        with identical regions land in one group.  Jobs in one cache
+        group differ only in topology/overlap/straggler/compression —
+        axes the compute cache never sees — so a group's first job
+        evaluates every key and its siblings are pure hits."""
+        return (regions_key, self.system, self.estimator)
+
 
 @dataclass
 class CampaignSpec:

@@ -29,6 +29,17 @@ class ComputeEstimator(abc.ABC):
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         """Estimated latency of one execution of the region, in seconds."""
 
+    def get_run_time_estimates(self,
+                               regions: list[ComputeRegion]) -> list[float]:
+        """Batched form of :meth:`get_run_time_estimate`.
+
+        The evaluate phase hands every compute region of a plan over in
+        one call; plain estimators just loop, while
+        :class:`~repro.core.estimators.cache.CachedEstimator` overrides
+        this to fetch all cached latencies in a single store round-trip.
+        """
+        return [self.get_run_time_estimate(r) for r in regions]
+
     def get_compile_args(self) -> dict:
         return {}
 

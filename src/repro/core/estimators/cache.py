@@ -15,9 +15,12 @@ Two layers:
 
 The on-disk format is a *file-locked append log* (JSONL): line 1 is a
 version header, every further line is one ``{"k": key, "v": seconds,
-"c": eval_cost_seconds}`` record.  Appends take an exclusive ``flock``;
-readers take a shared one and :meth:`PersistentCache.refresh` absorbs
-only the log tail written since the last read — which is what lets
+"c": eval_cost_seconds}`` record.  Appends take an exclusive ``flock``
+(batched: :meth:`PersistentCache.put_many` writes a whole evaluate
+phase's fresh entries under one lock); readers take a shared one and
+:meth:`PersistentCache.refresh` absorbs only the log tail written since
+the last read, skipping the lock entirely while a cheap ``stat`` shows
+the file unchanged — which is what lets
 process-pool campaign workers sharing one cache path observe each
 other's freshly computed entries *mid-campaign* instead of a startup
 snapshot.  Each entry also carries the wall-clock cost of the estimator
@@ -114,10 +117,12 @@ class PersistentCache:
         self.entries: dict[str, float] = {}
         self.costs: dict[str, float] = {}
         self.loaded_entries = 0
+        self.lock_roundtrips = 0  # flock acquisitions (I/O cost accounting)
         self._lock = threading.Lock()
         self._offset = 0          # bytes of the log already absorbed
         self._header_ok = False   # file exists with a matching header
         self._gen: str | None = None  # header generation id last seen
+        self._stat: tuple | None = None  # (ino, size, mtime_ns) last synced
         if path:
             self.load(path)
 
@@ -185,7 +190,9 @@ class PersistentCache:
         otherwise be tailed from a stale mid-record position.  Returns
         ``(valid_file, newly_seen_keys)``.
         """
-        size = os.fstat(f.fileno()).st_size
+        st = os.fstat(f.fileno())
+        size = st.st_size
+        self._stat = (st.st_ino, st.st_size, st.st_mtime_ns)
         if size == 0:
             self._offset = 0
             self._header_ok = False
@@ -216,6 +223,7 @@ class PersistentCache:
         try:
             with open(path) as f:
                 _lock_sh(f)
+                self.lock_roundtrips += 1
                 try:
                     with self._lock:
                         ok, new = self._sync_locked(f)
@@ -230,21 +238,28 @@ class PersistentCache:
     def refresh(self) -> int:
         """Absorb log records other processes wrote since the last read.
 
-        Cheap when nothing changed (one ``stat``).  Compaction by another
-        process is detected via the header generation id and triggers a
-        full re-read (in-memory entries are kept — absorption only
+        Cheap when nothing changed: one ``stat`` — the locked tail-read is
+        skipped entirely while the log's (inode, size, mtime) triple
+        matches the state last synced, so hot lookup paths pay no flock
+        when no other process has written.  Compaction by another process
+        is detected via the header generation id and triggers a full
+        re-read (in-memory entries are kept — absorption only
         adds/overwrites).  Returns the number of previously unseen keys.
         """
         if not self.path or not os.path.exists(self.path):
             return 0
         try:
-            if os.path.getsize(self.path) == self._offset and self._header_ok:
+            st = os.stat(self.path)
+            if (self._header_ok and self._stat is not None
+                    and (st.st_ino, st.st_size, st.st_mtime_ns)
+                    == self._stat):
                 return 0
         except OSError:
             return 0
         try:
             with open(self.path) as f:
                 _lock_sh(f)
+                self.lock_roundtrips += 1
                 try:
                     with self._lock:
                         ok, new = self._sync_locked(f)
@@ -255,21 +270,46 @@ class PersistentCache:
         return new if ok else 0
 
     def append(self, key: str, value: float, cost: float = 0.0) -> None:
-        """Record an entry and write it through to the shared log.
+        """Record one entry and write it through to the shared log."""
+        self.put_many({key: (value, cost)})
 
-        Holds an exclusive lock across (absorb others' records, write own
-        line), so concurrent appenders interleave cleanly and this
-        process's offset stays coherent with the file.
-        """
+    def get_many(self, keys: list[str]) -> dict[str, float]:
+        """Look up a batch of keys in one store round-trip.
+
+        A path-backed store tails the shared log at most *once* for the
+        whole batch (and only when some key is absent in memory) instead
+        of once per key — the lock-amortized lookup the evaluate phase
+        uses.  Returns only the keys present."""
+        if self.path and any(k not in self.entries for k in keys):
+            self.refresh()
         with self._lock:
-            self.entries[key] = value
-            if cost:
-                self.costs[key] = cost
-        if not self.path:
+            return {k: self.entries[k] for k in keys if k in self.entries}
+
+    def put_many(self, records: MutableMapping) -> None:
+        """Record a batch of entries and write them through to the shared
+        log under a *single* exclusive lock round-trip.
+
+        ``records`` maps key -> seconds or key -> (seconds, cost).  Holds
+        the lock across (absorb others' records, write own lines), so
+        concurrent appenders interleave cleanly and this process's offset
+        stays coherent with the file."""
+        norm: dict[str, tuple[float, float]] = {}
+        for key, v in records.items():
+            if isinstance(v, (tuple, list)):
+                norm[key] = (float(v[0]), float(v[1]) if len(v) > 1 else 0.0)
+            else:
+                norm[key] = (float(v), 0.0)
+        with self._lock:
+            for key, (value, cost) in norm.items():
+                self.entries[key] = value
+                if cost:
+                    self.costs[key] = cost
+        if not self.path or not norm:
             return
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         with open(self.path, "a+") as f:
             _lock_ex(f)
+            self.lock_roundtrips += 1
             try:
                 with self._lock:
                     ok, _ = self._sync_locked(f)
@@ -283,11 +323,14 @@ class PersistentCache:
                              "fingerprint": FINGERPRINT_VERSION,
                              "gen": self._gen}) + "\n")
                         self._header_ok = True
-                    f.write(json.dumps(
-                        {"k": key, "v": value, "c": cost or 0.0},
-                        separators=(",", ":")) + "\n")
+                    for key, (value, cost) in norm.items():
+                        f.write(json.dumps(
+                            {"k": key, "v": value, "c": cost or 0.0},
+                            separators=(",", ":")) + "\n")
                     f.flush()
                     self._offset = f.tell()
+                    st = os.fstat(f.fileno())
+                    self._stat = (st.st_ino, st.st_size, st.st_mtime_ns)
             finally:
                 _unlock(f)
 
@@ -343,7 +386,9 @@ class PersistentCache:
                             {"k": k, "v": v, "c": self.costs.get(k, 0.0)},
                             separators=(",", ":")) + "\n")
                 os.replace(tmp, path)
-                self._offset = os.path.getsize(path)
+                st = os.stat(path)
+                self._offset = st.st_size
+                self._stat = (st.st_ino, st.st_size, st.st_mtime_ns)
                 self._header_ok = True
         finally:
             if os.path.exists(tmp):
@@ -427,6 +472,60 @@ class CachedEstimator(ComputeEstimator):
             self.stats.miss_cost_seconds += dt
             self.stats.per_key_cost[key] = dt
         return value
+
+    def get_run_time_estimates(self,
+                               regions: list[ComputeRegion]) -> list[float]:
+        """Batched lookup: all regions of one evaluate phase in a single
+        store round-trip.
+
+        Per-region counters (hits, misses, saved/miss cost, per-key cost,
+        ``new_entries``) are updated exactly as the equivalent sequence of
+        :meth:`get_run_time_estimate` calls would — a duplicate
+        fingerprint later in the batch is a hit on the earlier miss — but
+        a path-backed :class:`PersistentCache` is tailed at most once for
+        the whole batch and all fresh entries are written through in one
+        exclusive-lock round-trip (:meth:`PersistentCache.put_many`)
+        instead of one per miss."""
+        import time
+        keys = [self._key(r) for r in regions]
+        if isinstance(self._mem, PersistentCache) and self._mem.path:
+            # one get_many tails the log at most once for the whole
+            # batch; absorbed entries serve the per-key loop below
+            self._mem.get_many(keys)
+        out: list[float] = []
+        pending: dict[str, tuple[float, float]] = {}
+        try:
+            for key, region in zip(keys, regions):
+                with self._lock:
+                    if key in self._mem:
+                        self.stats.hits += 1
+                        self.stats.saved_seconds += self._hit_cost(key)
+                        out.append(self._mem[key])
+                        continue
+                t0 = time.perf_counter()
+                value = self.inner.get_run_time_estimate(region)
+                dt = time.perf_counter() - t0
+                with self._lock:
+                    if isinstance(self._mem, PersistentCache):
+                        # memory-only for now: in-batch duplicates must
+                        # hit; the log write is one put_many at the end
+                        self._mem.merge({key: (value, dt)})
+                        pending[key] = (value, dt)
+                    else:
+                        self._mem[key] = value
+                    self.new_entries[key] = (value, dt)
+                    self.stats.misses += 1
+                    self.stats.miss_cost_seconds += dt
+                    self.stats.per_key_cost[key] = dt
+                out.append(value)
+        finally:
+            # flush even when the estimator raises mid-batch: entries
+            # already computed must reach the shared log (the per-region
+            # path wrote each through immediately)
+            if pending and isinstance(self._mem, PersistentCache) \
+                    and self._mem.path:
+                self._mem.put_many(pending)
+        return out
 
     def supports(self, region: ComputeRegion) -> bool:
         return self.inner.supports(region)

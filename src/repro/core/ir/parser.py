@@ -478,8 +478,17 @@ def parse_hlo(text: str) -> Program:
     return _HloParser(text).parse()
 
 
+#: calls to :func:`parse` in this process — parsing multi-MB HLO text is
+#: the single most expensive per-workload cost, so the campaign engine's
+#: plan store memoizes it per (workload, fidelity); tests and benchmarks
+#: assert on this counter
+PARSE_CALLS = 0
+
+
 def parse(text: str) -> Program:
     """Auto-detect dialect."""
+    global PARSE_CALLS
+    PARSE_CALLS += 1
     head = text[:4096]
     if "HloModule" in head:
         return parse_hlo(text)

@@ -6,6 +6,17 @@
 One :class:`Workload` (a StableHLO/HLO text pair exported from a jitted
 step) can be driven through any combination of slicer × estimator ×
 topology — the cross-fidelity, cross-architecture axis of the paper.
+
+Execution is split into two phases:
+
+* **plan** — parse + slice, producing a :class:`PredictionPlan`.  A plan
+  depends only on ``(workload, fidelity, slicer)``, so one plan serves
+  every grid point that shares those axes (the campaign engine builds
+  each plan exactly once and fans it out);
+* **evaluate** — estimator + trace + network simulation against a plan.
+  All region latencies are fetched through the estimator's *batched*
+  API, so a shared cache store pays one lock round-trip per plan
+  evaluation instead of one per region.
 """
 from __future__ import annotations
 
@@ -74,6 +85,58 @@ def export_workload(jitted, *specs, name: str = "workload",
         except Exception:
             pass
     return w
+
+
+@dataclass
+class PredictionPlan:
+    """The reusable product of the pipeline's *plan* phase.
+
+    Everything that depends only on ``(workload, fidelity, slicer)`` —
+    the parsed :class:`Program`, the slicer's segments (with region
+    fingerprints already computed by ``finalize_region``), and the
+    dependency map for the dependency-aware slicer.  Plans are plain
+    picklable data: the campaign engine builds each one once, shares it
+    across every grid point with the same key, and ships it to process
+    workers instead of raw IR text.
+    """
+    name: str
+    fidelity: str
+    slicer: str
+    program: Program
+    segments: list[Segment]
+    dep_map: dict[int, set[int]] | None = None
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        """The identity under which this plan is shared."""
+        return (self.name, self.fidelity, self.slicer)
+
+    @property
+    def compute_regions(self) -> list:
+        """The COMP regions, in segment order (the estimator batch)."""
+        return [s.region for s in self.segments if s.kind == "COMP"]
+
+    @property
+    def fingerprints(self) -> set[str]:
+        """Distinct region fingerprints — the plan's cache-key surface."""
+        return {s.region.fingerprint for s in self.segments
+                if s.kind == "COMP"}
+
+
+def build_plan(program: Program, *, slicer: str = "linear",
+               name: str = "workload",
+               fidelity: str = "raw") -> PredictionPlan:
+    """Run the plan phase: slice ``program`` once into a reusable plan."""
+    if slicer == "linear":
+        return PredictionPlan(name=name, fidelity=fidelity, slicer=slicer,
+                              program=program,
+                              segments=linear_split(program))
+    if slicer in ("dep", "dependency-aware"):
+        segments, dep_map = dependency_aware_split(program)
+        return PredictionPlan(name=name, fidelity=fidelity, slicer=slicer,
+                              program=program, segments=segments,
+                              dep_map=dep_map)
+    raise ValueError(f"unknown slicer {slicer!r}")
 
 
 @dataclass
@@ -173,19 +236,24 @@ def _trace_from_dep(segments: list[Segment], deps: dict[int, set[int]],
 
 @dataclass
 class PredictionJob:
-    """One (program × estimator × topology × knobs) prediction, reified.
+    """One (plan × estimator × topology × knobs) prediction, reified.
 
-    This is the unit the campaign engine schedules: constructing the job is
-    cheap and side-effect free; :meth:`run` executes stages (b)-(d) of the
-    methodology.  ``cache_store`` lets many jobs (and many estimators —
-    the (H, C, config, R) key disambiguates, including estimator
-    configuration) share one latency store, in-process or persistent;
-    ``cached`` exposes the wrapper after the run so callers can collect
-    ``new_entries`` for cross-process merging.
+    This is the unit the campaign engine schedules: constructing the job
+    is cheap and side-effect free; :meth:`run` executes stages (b)-(d) of
+    the methodology as two phases — :meth:`build_plan` (parse/slice,
+    skipped entirely when a prebuilt ``plan`` is supplied) and
+    :meth:`evaluate` (estimator + network simulation).  ``cache_store``
+    lets many jobs (and many estimators — the (H, C, config, R) key
+    disambiguates, including estimator configuration) share one latency
+    store, in-process or persistent; ``cached`` exposes the wrapper after
+    the run so callers can collect ``new_entries`` for cross-process
+    merging.  ``batch_cache=False`` forces one store round-trip per
+    region (the pre-plan behavior; kept for parity testing and
+    benchmarking against the batched default).
     """
-    program: Program
-    estimator: ComputeEstimator
-    topology: Topology
+    program: Program | None = None
+    estimator: ComputeEstimator = None
+    topology: Topology = None
     slicer: str = "linear"
     overlap: bool = False
     straggler_factor: float = 1.0
@@ -194,26 +262,40 @@ class PredictionJob:
     use_cache: bool = True
     system_name: str | None = None
     cache_store: object | None = None   # MutableMapping | PersistentCache
+    plan: PredictionPlan | None = None  # prebuilt plan (skips parse/slice)
+    batch_cache: bool = True
     cached: CachedEstimator | None = field(default=None, init=False)
 
-    def run(self) -> Prediction:
+    def build_plan(self) -> PredictionPlan:
+        """The plan phase for this job's (program, slicer)."""
+        if self.program is None:
+            raise ValueError(f"job {self.name!r}: no program and no plan")
+        return build_plan(self.program, slicer=self.slicer, name=self.name)
+
+    def evaluate(self, plan: PredictionPlan) -> Prediction:
+        """The evaluate phase: cost ``plan``'s regions (one batched cache
+        operation), build the trace, and simulate the network."""
+        if self.estimator is None or self.topology is None:
+            raise ValueError(
+                f"job {self.name!r}: estimator and topology are required")
         t0 = time.perf_counter()
         self.cached = (CachedEstimator(self.estimator, store=self.cache_store)
                        if self.use_cache else None)
         est = self.cached or self.estimator
 
-        if self.slicer == "linear":
-            segments = linear_split(self.program)
-            durations = [est.get_run_time_estimate(s.region)
-                         if s.kind == "COMP" else 0.0 for s in segments]
-            trace = _trace_from_linear(segments, durations, self.name)
-        elif self.slicer in ("dep", "dependency-aware"):
-            segments, dep_map = dependency_aware_split(self.program)
-            durations = [est.get_run_time_estimate(s.region)
-                         if s.kind == "COMP" else 0.0 for s in segments]
-            trace = _trace_from_dep(segments, dep_map, durations, self.name)
+        segments = plan.segments
+        if self.batch_cache:
+            costed = iter(est.get_run_time_estimates(plan.compute_regions))
+            durations = [next(costed) if s.kind == "COMP" else 0.0
+                         for s in segments]
         else:
-            raise ValueError(f"unknown slicer {self.slicer!r}")
+            durations = [est.get_run_time_estimate(s.region)
+                         if s.kind == "COMP" else 0.0 for s in segments]
+        if plan.slicer == "linear":
+            trace = _trace_from_linear(segments, durations, self.name)
+        else:
+            trace = _trace_from_dep(segments, plan.dep_map, durations,
+                                    self.name)
 
         trace.validate()
         sched = simulate(trace, self.topology, overlap=self.overlap,
@@ -235,6 +317,9 @@ class PredictionJob:
             cache_stats=self.cached.stats if self.cached else None,
             schedule=sched,
             breakdown=sched.breakdown)
+
+    def run(self) -> Prediction:
+        return self.evaluate(self.plan or self.build_plan())
 
 
 def predict(program: Program, estimator: ComputeEstimator, topology: Topology,

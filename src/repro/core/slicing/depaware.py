@@ -20,6 +20,11 @@ from ..ir.collectives import comm_spec
 from ..ir.graph import OpNode, Program, ZERO_COST_OPS
 from .regions import ComputeRegion, Segment, finalize_region
 
+#: calls to :func:`dependency_aware_split` in this process — plan reuse
+#: means this grows once per (workload, fidelity) per campaign, not once
+#: per job; tests and benchmarks assert on it
+SPLIT_CALLS = 0
+
 
 def _fuse_chains(ops: list[OpNode]) -> list[list[OpNode]]:
     """Group single-consumer chains of cheap ops with their consumer.
@@ -57,6 +62,8 @@ def _fuse_chains(ops: list[OpNode]) -> list[list[OpNode]]:
 def dependency_aware_split(
     program: Program,
 ) -> tuple[list[Segment], dict[int, set[int]]]:
+    global SPLIT_CALLS
+    SPLIT_CALLS += 1
     segments: list[Segment] = []
     deps: dict[int, set[int]] = {}
     producers: dict[str, set[int]] = {}   # SSA name -> producing segment set

@@ -18,12 +18,19 @@ from .regions import ComputeRegion, Segment, finalize_region
 
 _group_counter = itertools.count(1)
 
+#: calls to :func:`linear_split` in this process — plan reuse means this
+#: grows once per (workload, fidelity) per campaign, not once per job;
+#: tests and benchmarks assert on it
+SPLIT_CALLS = 0
+
 
 def _has_collective(op: OpNode) -> bool:
     return any(o.is_collective and not o.is_async_done for o in op.walk())
 
 
 def linear_split(program: Program, min_region_ops: int = 1) -> list[Segment]:
+    global SPLIT_CALLS
+    SPLIT_CALLS += 1
     segments: list[Segment] = []
 
     def flush(pending: list[OpNode], repeat: int, group: int) -> None:
