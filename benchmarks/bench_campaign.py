@@ -18,12 +18,10 @@ artifact) plus the usual CSV under ``artifacts/bench/``.
 """
 import json
 import os
-import sys
 import tempfile
 import time
 
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
-from benchmarks.common import emit  # noqa: E402
+from benchmarks.common import emit
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

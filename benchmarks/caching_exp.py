@@ -8,9 +8,6 @@ Paper numbers: 89.7 % average evaluation-time reduction on Llama-3
 26.8 % on ResNet (stage shapes differ, less reuse).  We measure the same
 metric — fraction of profiling-estimator wall time avoided by the cache —
 on one Llama-3 and one ResNet export, and additionally report hit rates."""
-import sys
-
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import build_llama_step, emit  # noqa: E402
 
 

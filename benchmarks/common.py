@@ -4,10 +4,11 @@ from __future__ import annotations
 import csv
 import os
 import statistics
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repro resolves from the installed package (pip install -e .) or
+# PYTHONPATH=src — benchmark scripts carry no sys.path edits; run them
+# as modules from the repo root: `python -m benchmarks.run [figure...]`
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench")

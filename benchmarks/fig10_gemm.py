@@ -19,10 +19,9 @@ workloads × four systolic presets); this script only derives the
 reference and error columns from the campaign rows.  Per-preset
 latencies are identical to the previous hand-rolled
 ``SystolicEstimator.gemm_latency`` loop at the emitted precision."""
-import sys, os
+import os
 
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
-from benchmarks.common import emit  # noqa: E402
+from benchmarks.common import emit
 
 SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
                     "fig10_gemm.json")

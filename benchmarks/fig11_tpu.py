@@ -17,9 +17,6 @@ The sweep runs through ``repro.campaign`` from the checked-in
 full train step (mode="train", mesh [8, 1]) via the same
 ``train_step_exports`` path the pre-port loop used, so predictions are
 bit-identical to the hand-rolled version."""
-import sys
-
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import emit  # noqa: E402
 
 SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",

@@ -17,9 +17,6 @@ Table IV constants and report Table-V-style speedup matrices for both
 estimator classes (speedup error is computed against the roofline-balance
 reference, since real-GPU measurements are unavailable offline).
 """
-import sys
-
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import build_llama_step, emit, mape, measure  # noqa: E402
 
 SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",

@@ -11,9 +11,6 @@ checked-in ``specs/fig7_resnet.json``: the campaign engine exports each
 full ResNet train step (mode="train", mesh [4, 1]) via the same
 ``resnet_train_exports`` path the host-validated rows use, so campaign
 predictions are bit-identical to the pre-port hand-rolled loop."""
-import sys
-
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import emit, mape, measure  # noqa: E402
 
 SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",

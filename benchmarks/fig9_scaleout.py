@@ -8,55 +8,35 @@ Reproduced claims: (i) both estimator classes predict the communication
 fraction growing with scale; (ii) per-GPU step time rises from 16 to 128
 GPUs for fixed per-device batch (collective cost grows with ring size
 across the dragonfly); (iii) the analytical estimator stays stable while
-profiling-projection diverges with deeper communication hierarchies."""
-import sys
+profiling-projection diverges with deeper communication hierarchies.
 
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
-from benchmarks.common import build_llama_step, emit  # noqa: E402
+The sweep runs through ``repro.campaign`` from the checked-in
+``specs/fig9_scaleout.json``: each scale pairs its own workload (batch
+2/GPU at 16 GPUs, 1/GPU at 128; per-workload mesh) with its own dragonfly
+fabric via the spec's ``zip`` group — the paired-axis grid a plain cross
+product cannot express.  Workload export uses the same
+``train_step_exports`` path the pre-port loop used, so predictions are
+bit-identical to the hand-rolled version (locked by the parity test in
+``tests/test_report.py``)."""
+from benchmarks.common import emit
+
+SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
+                    "fig9_scaleout.json")
 
 
 def main() -> None:
-    from repro.campaign import (CampaignSpec, EstimatorSpec, TopologySpec,
-                                WorkloadSpec, run_campaign)
-    from repro.core.pipeline import export_workload
-    from repro.launch.mesh import make_mesh
+    from repro.campaign import CampaignSpec, run_campaign
+
+    spec = CampaignSpec.from_json(SPEC)
+    res = run_campaign(spec, executor="thread")
+    assert res.summary["num_failed"] == 0, res.summary["failures"]
+    idx = {(r["workload"], r["estimator"]): r for r in res.ok_rows}
 
     rows = []
-    # paper: batch 2/GPU at 16 GPUs, 1/GPU at 128 GPUs.  Each scale has
-    # its own workload AND its own fabric, so each is a 1-point-per-
-    # estimator campaign (profiling-class = per-op costing of the raw
-    # export with launch overheads — see fig6 for the rationale).
-    for n_gpus, per_dev_batch, nodes_per_router, routers, groups in [
-            (16, 2, 1, 2, 2), (128, 1, 4, 4, 2)]:
-        mesh = make_mesh((n_gpus, 1), ("data", "model"))
-        cfg, jitted, abs_args, _ = build_llama_step(
-            "llama2-7b", seq=2048, batch=n_gpus * per_dev_batch, mesh=mesh,
-            train=True)
-        name = f"llama2-{n_gpus}"
-        with mesh:
-            w = export_workload(jitted, *abs_args, name=name)
-        spec = CampaignSpec(
-            name=f"fig9-{n_gpus}",
-            workloads=[WorkloadSpec(name=name)],
-            systems=["gh200"],
-            estimators=[
-                EstimatorSpec.from_dict({"kind": "roofline"}),
-                EstimatorSpec.from_dict(
-                    {"kind": "roofline", "fidelity": "raw",
-                     "options": {"mode": "per-op",
-                                 "include_overheads": True}}),
-            ],
-            slicers=["linear"],
-            topologies=[TopologySpec.from_dict({"kind": "dragonfly", "params": {
-                "num_nodes": n_gpus // 4, "gpus_per_node": 4,
-                "nodes_per_router": nodes_per_router,
-                "routers_per_group": routers, "groups": groups,
-                "intra_bw": 150e9, "inter_bw": 25e9}})],
-        )
-        res = run_campaign(spec, workloads={name: w}, executor="thread")
-        idx = {r["estimator"]: r for r in res.ok_rows}
-        p_ana = idx["roofline"]
-        p_prof = idx["roofline-per-op-ovh@raw"]
+    for w in spec.workloads:
+        n_gpus = w.mesh[0]
+        p_ana = idx[(w.name, "roofline")]
+        p_prof = idx[(w.name, "roofline-per-op-ovh@raw")]
         prof_total = p_prof["step_time_s"] + p_ana["comm_s"]
         rows.append({
             "name": f"fig9-{n_gpus}gpu",

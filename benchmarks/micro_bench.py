@@ -2,10 +2,8 @@
 slicers, network scheduler, Pallas kernels (interpret mode), estimators."""
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
-import sys
 import time
 
-sys.path.insert(0, os.path.dirname(__file__) + "/..")
 from benchmarks.common import build_llama_step, emit  # noqa: E402
 
 

@@ -33,8 +33,11 @@ def run_figure(key: str) -> int:
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)  # each figure sets its own device count
     print(f"### {key} ({module}) ###", flush=True)
+    # -m from the repo root: the benchmarks package resolves from cwd and
+    # repro from the installed package (or PYTHONPATH=src) — no figure
+    # script carries sys.path edits
     proc = subprocess.run(
-        [sys.executable, os.path.join(HERE, module + ".py")],
+        [sys.executable, "-m", f"benchmarks.{module}"],
         cwd=os.path.dirname(HERE), env=env)
     return proc.returncode
 

@@ -34,22 +34,25 @@ figure grid)::
     python -m repro.campaign run spec.json --out artifacts/sweep
     python -m repro.campaign validate spec.json
 """
+from .report import build_report, check_rows, make_golden, render_markdown
 from .spec import (CampaignSpec, EstimatorSpec, JobSpec, TopologySpec,
                    WorkloadSpec)
 
 __all__ = [
     "CampaignSpec", "CampaignResult", "EstimatorSpec", "JobSpec",
     "TopologySpec", "WorkloadSpec", "run_campaign",
+    "build_report", "check_rows", "make_golden", "render_markdown",
 ]
 
 
 def __getattr__(name):
     """Lazy re-export of the runner (PEP 562).
 
-    Spec handling is pure stdlib; the runner pulls in the estimator
-    stack (numpy, and jax for arch exports).  Deferring that import
-    keeps ``python -m repro.campaign validate`` usable in minimal
-    environments — e.g. the CI docs job, which installs nothing."""
+    Spec and report handling are pure stdlib; the runner pulls in the
+    estimator stack (numpy, and jax for arch exports).  Deferring that
+    import keeps ``python -m repro.campaign validate`` and ``report
+    --results`` usable in minimal environments — e.g. the CI docs job,
+    which installs nothing."""
     if name in ("CampaignResult", "run_campaign"):
         from . import runner
         return getattr(runner, name)

@@ -1,4 +1,4 @@
-"""CLI entry point: ``python -m repro.campaign [run|validate] spec.json``.
+"""CLI entry point: ``python -m repro.campaign [run|validate|report]``.
 
 A spec file is either one campaign — the JSON form of
 :class:`~repro.campaign.spec.CampaignSpec` (see ``docs/campaign.md`` for
@@ -12,9 +12,18 @@ cache and writing results under ``<out>/<campaign-name>/``.  This is what
 makes ``python -m repro.campaign run specs/paper_full.json`` a
 single-command full-paper reproduction.
 
-``validate`` checks every spec (grid axes, workload sources, mesh shapes)
-and prints the expanded grid size without running anything — CI runs it
-on the checked-in ``specs/*.json``.
+``validate`` checks every spec (grid axes, zip groups, workload sources,
+mesh shapes) and prints the expanded grid size without running anything —
+CI runs it on the checked-in ``specs/*.json``.
+
+``report`` turns campaign results into the paper's evaluation artifacts
+(MAPE vs recorded references, Kendall-τ/Spearman rank preservation,
+fidelity tables — ``repro.campaign.report``), emitted as JSON + markdown.
+``--check`` additionally gates the predictions against the checked-in
+golden snapshots (``specs/golden/``), failing on drift beyond tolerance
+or any rank inversion; ``--update-golden`` regenerates the snapshots and
+reference rows after an intentional change.  CI runs ``report --check``
+on every checked-in spec grid.
 
 Arch workloads with a ``mesh`` need that many XLA devices; the CLI counts
 the devices the specs need and presets
@@ -105,34 +114,166 @@ def _preset_device_count(specs: list[tuple[str, CampaignSpec]]) -> None:
 
 def _print_grid(name: str, spec: CampaignSpec) -> None:
     jobs = spec.expand()
+    zipped = {a: tuple(g) for g in spec.zip_axes for a in g}
+    shown, bits = set(), []
+    for axis in ("workloads", "systems", "estimators", "slicers",
+                 "topologies"):
+        if axis in shown:
+            continue
+        group = zipped.get(axis)
+        if group is None:
+            bits.append(f"{len(getattr(spec, axis))} {axis}")
+        else:
+            shown.update(group)
+            bits.append(f"{len(getattr(spec, axis))} zipped "
+                        + "⊗".join(group))
     print(f"campaign {name!r}: {len(jobs)} grid points "
-          f"({len(spec.workloads)} workloads × {len(spec.systems)} systems "
-          f"× {len(spec.estimators)} estimators × {len(spec.slicers)} "
-          f"slicers × {len(spec.topologies)} topologies)", flush=True)
+          f"({' × '.join(bits)})", flush=True)
+
+
+def _load_results_jsonl(path: str) -> list[dict]:
+    """Read back a streamed results file (stdlib twin of
+    ``runner.load_jsonl`` — reporting on existing results must not pull
+    in the estimator stack)."""
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def _report_command(args) -> int:
+    """The ``report`` subcommand: build evaluation reports (and golden
+    checks/updates) for every campaign named by the spec arguments."""
+    from .report import (DEFAULT_TOLERANCE, build_report, check_rows,
+                         golden_path, load_json, make_golden,
+                         make_reference, reference_path, render_markdown,
+                         write_json)
+
+    entries = []  # (spec_file_path, campaign_name, CampaignSpec)
+    for path in args.spec:
+        for name, spec in load_specs(path):
+            if any(name == n for _, n, _ in entries):
+                raise ValueError(
+                    f"report: duplicate campaign name {name!r} across "
+                    "spec arguments")
+            entries.append((path, name, spec))
+    if args.results and len(entries) != 1:
+        print("report: --results requires exactly one campaign")
+        return 2
+
+    failures: list[str] = []
+    num_failed = 0
+    if not args.results:
+        _preset_device_count([(n, s) for _, n, s in entries])
+    for path, name, spec in entries:
+        out_dir = os.path.join(args.out, name)
+        if args.results:
+            rows = _load_results_jsonl(args.results)
+        else:
+            from .runner import run_campaign
+
+            _print_grid(name, spec)
+            result = run_campaign(
+                spec, out_dir=out_dir, executor=args.executor,
+                max_workers=args.jobs, cache_path=args.cache,
+                progress=not args.quiet)
+            rows = result.rows
+
+        reference = load_json(reference_path(path, name))
+        if args.update_golden:
+            tol = (args.tolerance if args.tolerance is not None
+                   else DEFAULT_TOLERANCE)
+            gpath = write_json(
+                golden_path(path, name),
+                make_golden(name, rows, tolerance=tol,
+                            meta={"spec": os.path.basename(path)}))
+            # references are recorded evaluation *baselines*, not
+            # regression snapshots: only seed a missing file (delete it
+            # first to deliberately re-record).  Seeding happens before
+            # build_report so the very first --update-golden run already
+            # reports MAPE against the freshly recorded rows.
+            rpath = reference_path(path, name)
+            if reference is None:
+                reference = make_reference(name, rows)
+                write_json(rpath, reference)
+                print(f"  wrote {gpath}, {rpath}")
+            else:
+                print(f"  wrote {gpath} (kept existing {rpath})")
+
+        report = build_report(name, rows, reference=reference)
+        num_failed += report["num_failed"]
+        if args.check:
+            golden = load_json(golden_path(path, name))
+            if golden is None:
+                check = {"failures": [
+                    f"{name}: no golden snapshot at "
+                    f"{golden_path(path, name)} — generate one with "
+                    "--update-golden"], "rows_checked": 0,
+                    "tolerance": (args.tolerance
+                                  if args.tolerance is not None
+                                  else DEFAULT_TOLERANCE)}
+            else:
+                check = check_rows(golden, rows,
+                                   tolerance=args.tolerance)
+            report["golden_check"] = check
+            failures.extend(check["failures"])
+
+        jpath = write_json(os.path.join(out_dir, "report.json"), report)
+        mpath = os.path.join(out_dir, "report.md")
+        with open(mpath, "w") as f:
+            f.write(render_markdown(report))
+        rp = report["rank_preservation"]
+        trend = ("n/a" if rp["min_kendall_tau"] is None else
+                 f"min τ {rp['min_kendall_tau']}")
+        check_tag = ""
+        if "golden_check" in report:
+            n_fail = len(report["golden_check"]["failures"])
+            check_tag = (" · golden OK" if not n_fail
+                         else f" · golden FAILED ({n_fail})")
+        print(f"report {name!r}: {report['num_ok']}/{report['num_rows']} "
+              f"rows · {trend}{check_tag}")
+        print(f"  wrote {jpath}, {mpath}")
+
+    for f in failures:
+        print(f"GOLDEN-CHECK FAILURE: {f}")
+    if num_failed:
+        # mirror `run`: a half-failed campaign must not exit 0 just
+        # because its surviving rows produced a report
+        print(f"report: {num_failed} grid points failed")
+    return 1 if failures or num_failed else 0
 
 
 def main(argv: list[str] | None = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     command = "run"
-    if argv and argv[0] in ("run", "validate"):
+    if argv and argv[0] in ("run", "validate", "report"):
         command = argv.pop(0)
 
     ap = argparse.ArgumentParser(
         prog="python -m repro.campaign",
-        description="Run or validate a prediction campaign from a JSON "
-                    "grid spec (single campaign or suite).")
-    ap.add_argument("spec", nargs="+" if command == "validate" else None,
+        description="Run, validate, or report on a prediction campaign "
+                    "from a JSON grid spec (single campaign or suite).")
+    ap.add_argument("spec", nargs="+" if command != "run" else None,
                     help="path to the campaign/suite spec (JSON)")
-    if command == "run":
-        ap.add_argument("--out", default="artifacts/campaign",
-                        help="output directory for results.jsonl/csv + "
-                             "summary.json (default: artifacts/campaign)")
+    if command in ("run", "report"):
         ap.add_argument("--executor", default="thread",
                         choices=("serial", "thread", "process"),
                         help="job executor (default: thread)")
         ap.add_argument("--jobs", type=int, default=None,
                         help="max parallel workers (default: executor's "
                              "choice)")
+        ap.add_argument("--cache", default=None, metavar="PATH",
+                        help="persistent (H,C,R) cache file shared across "
+                             "runs and live workers")
+        ap.add_argument("--quiet", action="store_true",
+                        help="suppress per-job progress lines")
+    if command == "run":
+        ap.add_argument("--out", default="artifacts/campaign",
+                        help="output directory for results.jsonl/csv + "
+                             "summary.json (default: artifacts/campaign)")
         ap.add_argument("--schedule", default="locality",
                         choices=("locality", "grid"),
                         help="job ordering: 'locality' groups jobs by "
@@ -140,14 +281,34 @@ def main(argv: list[str] | None = None) -> int:
                              "fingerprint-heavy plans warm the cache "
                              "early); 'grid' is pure grid order "
                              "(default: locality)")
-        ap.add_argument("--cache", default=None, metavar="PATH",
-                        help="persistent (H,C,R) cache file shared across "
-                             "runs and live workers")
         ap.add_argument("--dry-run", action="store_true",
                         help="print the expanded grid and exit")
-        ap.add_argument("--quiet", action="store_true",
-                        help="suppress per-job progress lines")
+    if command == "report":
+        ap.add_argument("--out", default="artifacts/report",
+                        help="output directory: campaign artifacts + "
+                             "report.json/report.md per campaign "
+                             "(default: artifacts/report)")
+        ap.add_argument("--results", default=None, metavar="PATH",
+                        help="report on an existing results.jsonl instead "
+                             "of running the campaign (single campaign "
+                             "only)")
+        ap.add_argument("--check", action="store_true",
+                        help="gate predictions against the checked-in "
+                             "golden snapshots (specs/golden/): fail on "
+                             "drift beyond tolerance, grid changes, or "
+                             "rank inversions")
+        ap.add_argument("--update-golden", action="store_true",
+                        help="(re)write the golden snapshot and recorded "
+                             "reference rows for each campaign from this "
+                             "run")
+        ap.add_argument("--tolerance", type=float, default=None,
+                        help="relative drift tolerance; overrides the "
+                             "per-snapshot value (and sets it with "
+                             "--update-golden)")
     args = ap.parse_args(argv)
+
+    if command == "report":
+        return _report_command(args)
 
     if command == "validate":
         bad = 0

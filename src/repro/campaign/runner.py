@@ -345,6 +345,9 @@ def run_campaign(spec: CampaignSpec, *,
     summary["wall_s"] = wall
     summary["cache"] = cache_report
     summary["plans"] = plan_report
+    # full spec provenance: a streamed results dir is self-describing,
+    # so `report --results` (and humans) can recover the grid later
+    summary["spec"] = spec.to_dict()
 
     csv_path = summary_path = None
     if out_dir:

@@ -1,9 +1,12 @@
 """Declarative campaign grids and their expansion into prediction jobs.
 
 A :class:`CampaignSpec` is a small JSON-able description of a sweep; every
-axis is a list and the grid is the cross product.  Expansion produces
-:class:`JobSpec` records made only of primitives, so they pickle cleanly
-into worker processes and serialize verbatim into result rows.
+axis is a list and the grid is the cross product — except axes joined in
+a ``zip`` group, which are paired element-wise (the paper's Fig 9 pairs
+each scale-out workload with its own fabric; a cross product cannot
+express that).  Expansion produces :class:`JobSpec` records made only of
+primitives, so they pickle cleanly into worker processes and serialize
+verbatim into result rows.
 """
 from __future__ import annotations
 
@@ -16,6 +19,11 @@ from dataclasses import asdict, dataclass, field
 ESTIMATOR_KINDS = ("roofline", "systolic", "mixed", "profiling")
 TOPOLOGY_KINDS = ("auto", "a2a", "dragonfly", "torus", "multipod")
 SLICER_NAMES = ("linear", "dep", "dependency-aware")
+
+#: the grid axes, in canonical (expansion) order — ``zip`` groups may
+#: only name these, and expansion enumerates them in exactly this order
+AXIS_FIELDS = ("workloads", "systems", "estimators", "slicers",
+               "topologies", "overlap", "straggler_factor", "compression")
 
 
 @dataclass(frozen=True)
@@ -223,7 +231,18 @@ class JobSpec:
 
 @dataclass
 class CampaignSpec:
-    """The declarative grid.  Every axis is a list; grid = cross product."""
+    """The declarative grid.  Every axis is a list; grid = cross product
+    of the axes, except that axes named together in a ``zip_axes`` group
+    (JSON key ``"zip"``) are paired element-wise — entry *i* of each
+    zipped axis only ever appears with entry *i* of its partners.
+
+    Zipped axes must have equal lengths.  Per-element knobs that vary
+    *with* a zipped axis live on the element specs themselves (e.g. each
+    :class:`WorkloadSpec` carries its own ``mesh``/``batch``), so a
+    (workload, fabric) pairing like the paper's Fig 9 scale-out is one
+    spec: zip ``workloads`` with ``topologies`` and give each workload
+    its own mesh and batch.
+    """
     name: str = "campaign"
     workloads: list[WorkloadSpec] = field(default_factory=list)
     systems: list[str] = field(default_factory=lambda: ["a100"])
@@ -235,13 +254,15 @@ class CampaignSpec:
     overlap: list[bool] = field(default_factory=lambda: [False])
     straggler_factor: list[float] = field(default_factory=lambda: [1.0])
     compression: list[float] = field(default_factory=lambda: [1.0])
+    zip_axes: list[tuple] = field(default_factory=list)  # JSON key: "zip"
 
     @classmethod
     def from_dict(cls, d: dict) -> "CampaignSpec":
         """Build and validate from the JSON dict form; unknown keys are
         rejected so spec typos fail fast."""
         d = dict(d)
-        known = {f for f in cls.__dataclass_fields__}
+        zip_groups = d.pop("zip", [])
+        known = {f for f in cls.__dataclass_fields__} - {"zip_axes"}
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown campaign spec keys: {sorted(unknown)}")
@@ -259,6 +280,7 @@ class CampaignSpec:
             straggler_factor=[float(s)
                               for s in d.get("straggler_factor", [1.0])],
             compression=[float(c) for c in d.get("compression", [1.0])],
+            zip_axes=[tuple(g) for g in zip_groups],
         )
         spec.validate()
         return spec
@@ -276,6 +298,9 @@ class CampaignSpec:
             e["options"] = dict(e["options"])
         for t in d["topologies"]:
             t["params"] = dict(t["params"])
+        zip_groups = d.pop("zip_axes")
+        if zip_groups:
+            d["zip"] = [list(g) for g in zip_groups]
         return d
 
     def validate(self, provided: set[str] | frozenset = frozenset()) -> None:
@@ -296,6 +321,7 @@ class CampaignSpec:
                      "overlap", "straggler_factor", "compression"):
             if not getattr(self, axis):
                 raise ValueError(f"campaign spec: axis {axis!r} is empty")
+        self._validate_zip()
         for e in self.estimators:
             if e.kind not in ESTIMATOR_KINDS:
                 raise ValueError(
@@ -319,26 +345,86 @@ class CampaignSpec:
                     f"campaign spec: unknown system {name!r}; "
                     f"have {['host', *SYSTEMS]}")
 
+    def _validate_zip(self) -> None:
+        """Reject malformed zip groups: unknown axis names, axes claimed
+        by more than one group (or twice in one), groups of fewer than
+        two axes, and — the silent-mispairing hazard — member axes of
+        unequal lengths."""
+        seen: dict[str, int] = {}
+        for gi, group in enumerate(self.zip_axes):
+            if len(group) < 2:
+                raise ValueError(
+                    f"campaign spec: zip group {list(group)} needs at "
+                    "least two axes to pair")
+            for axis in group:
+                if axis not in AXIS_FIELDS:
+                    raise ValueError(
+                        f"campaign spec: zip group {list(group)} names "
+                        f"unknown axis {axis!r}; axes are {AXIS_FIELDS}")
+                if axis in seen:
+                    where = ("twice in one group" if seen[axis] == gi
+                             else "in more than one zip group")
+                    raise ValueError(
+                        f"campaign spec: axis {axis!r} appears {where} — "
+                        "each axis can be zipped at most once")
+                seen[axis] = gi
+            lengths = {axis: len(getattr(self, axis)) for axis in group}
+            if len(set(lengths.values())) > 1:
+                detail = ", ".join(f"{a}={n}" for a, n in lengths.items())
+                raise ValueError(
+                    f"campaign spec: zip group {list(group)} pairs axes "
+                    f"of unequal lengths ({detail}) — zipped axes are "
+                    "matched element-wise and must have the same length")
+
+    def _axis_blocks(self) -> list[list[dict]]:
+        """The grid's independent blocks, in canonical axis order.
+
+        Each block is a list of ``{axis_field: element}`` dicts: an
+        unzipped axis contributes one single-key dict per element; a zip
+        group contributes one multi-key dict per paired index.  The grid
+        is the cross product of the blocks, so with no zip groups the
+        enumeration order is exactly the legacy full cross product.  A
+        group is anchored at the canonical position of its earliest
+        member axis."""
+        group_of = {axis: tuple(g) for g in self.zip_axes for axis in g}
+        blocks: list[list[dict]] = []
+        consumed: set[str] = set()
+        for name in AXIS_FIELDS:
+            if name in consumed:
+                continue
+            group = group_of.get(name)
+            if group is None:
+                blocks.append([{name: v} for v in getattr(self, name)])
+            else:
+                consumed.update(group)
+                n = len(getattr(self, name))
+                blocks.append([{axis: getattr(self, axis)[i]
+                                for axis in group} for i in range(n)])
+        return blocks
+
     @property
     def num_points(self) -> int:
-        """Grid size: the product of all axis lengths."""
-        return (len(self.workloads) * len(self.systems)
-                * len(self.estimators) * len(self.slicers)
-                * len(self.topologies) * len(self.overlap)
-                * len(self.straggler_factor) * len(self.compression))
+        """Grid size: the product of the block lengths (a zip group of
+        axes counts once, not once per member)."""
+        n = 1
+        for block in self._axis_blocks():
+            n *= len(block)
+        return n
 
     def expand(self) -> list[JobSpec]:
-        """Cross product of all axes, in deterministic axis order."""
+        """The grid, in deterministic canonical axis order: cross product
+        of all axes, with zipped axes advancing together."""
         jobs: list[JobSpec] = []
-        grid = itertools.product(
-            self.workloads, self.systems, self.estimators, self.slicers,
-            self.topologies, self.overlap, self.straggler_factor,
-            self.compression)
-        for i, (w, system, est, slicer, topo, ovl, strag, comp) in \
-                enumerate(grid):
+        for i, combo in enumerate(itertools.product(*self._axis_blocks())):
+            d: dict = {}
+            for part in combo:
+                d.update(part)
+            w, est = d["workloads"], d["estimators"]
             fidelity = est.fidelity or w.fidelity or "optimized"
             jobs.append(JobSpec(
                 job_id=i, workload=w.name, fidelity=fidelity,
-                system=system, estimator=est, slicer=slicer, topology=topo,
-                overlap=ovl, straggler_factor=strag, compression=comp))
+                system=d["systems"], estimator=est, slicer=d["slicers"],
+                topology=d["topologies"], overlap=d["overlap"],
+                straggler_factor=d["straggler_factor"],
+                compression=d["compression"]))
         return jobs

@@ -1,0 +1,146 @@
+"""Property-based tests for the batched PersistentCache operations.
+
+Two invariants the campaign evaluate phase leans on:
+
+* **round-trip equivalence** — any interleaving of ``put_many`` /
+  ``get_many`` across two live handles on one shared log is
+  observationally identical to the same interleaving expressed as
+  single-entry ``append`` / ``refresh``+``get`` operations (same
+  lookup results, same final on-disk entries and persisted costs);
+* **lock economy** — a batched operation takes at most one flock
+  round-trip regardless of batch size (``put_many`` exactly one for a
+  non-empty batch; ``get_many`` at most one, and zero when every key is
+  already in memory).
+"""
+import os
+import tempfile
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need the hypothesis dev dependency "
+           "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.estimators.cache import PersistentCache  # noqa: E402
+
+KEYS = st.sampled_from([f"k{i}" for i in range(6)])
+KEY_SETS = st.lists(KEYS, min_size=1, max_size=4, unique=True)
+
+
+def value_of(key: str) -> float:
+    """Deterministic value per key — the domain invariant the cache's
+    last-writer-wins races lean on: an (H, C, R) key always evaluates to
+    the same latency, so re-puts are idempotent.  (Floats round-trip
+    exactly through the JSON log, so the model compares with ``==``.)"""
+    return (int(key[1:]) + 1) * 1.359375
+
+
+def cost_of(key: str) -> float:
+    return (int(key[1:]) + 1) * 0.265625
+
+
+def records_for(keys: list[str]) -> dict:
+    return {k: (value_of(k), cost_of(k)) for k in keys}
+
+
+RECORDS = KEY_SETS.map(records_for)
+
+
+@st.composite
+def interleavings(draw):
+    """Arbitrary op sequences over two handles (a, b) on one log:
+    ('put', handle, records) and ('get', handle, keys)."""
+    ops = []
+    for _ in range(draw(st.integers(min_value=1, max_value=10))):
+        handle = draw(st.sampled_from(["a", "b"]))
+        if draw(st.booleans()):
+            ops.append(("put", handle, draw(RECORDS)))
+        else:
+            ops.append(("get", handle,
+                        draw(st.lists(KEYS, min_size=1, max_size=5))))
+    return ops
+
+
+class TestBatchedOpsRoundTrip:
+    @given(ops=interleavings())
+    @settings(max_examples=40, deadline=None)
+    def test_batched_matches_single_ops_under_interleaving(self, ops):
+        """Replay one op sequence through batched ops (put_many/get_many)
+        and through single ops (append / refresh+get) on separate logs:
+        every lookup and both final stores must agree with the model."""
+        with tempfile.TemporaryDirectory() as d:
+            batched_path = os.path.join(d, "batched.jsonl")
+            single_path = os.path.join(d, "single.jsonl")
+            batched = {"a": PersistentCache(batched_path),
+                       "b": PersistentCache(batched_path)}
+            single = {"a": PersistentCache(single_path),
+                      "b": PersistentCache(single_path)}
+            model: dict[str, float] = {}
+            costs: dict[str, float] = {}
+            for kind, handle, payload in ops:
+                if kind == "put":
+                    batched[handle].put_many(payload)
+                    for k, (v, c) in payload.items():
+                        single[handle].append(k, v, cost=c)
+                        model[k] = v
+                        costs[k] = c
+                else:
+                    got_b = batched[handle].get_many(payload)
+                    single[handle].refresh()
+                    got_s = {k: single[handle].get(k) for k in payload
+                             if k in single[handle]}
+                    expect = {k: model[k] for k in payload if k in model}
+                    assert got_b == expect
+                    assert got_s == expect
+            # final on-disk state: a fresh load of either log sees the
+            # same entries and the same persisted per-key costs
+            fresh_b = PersistentCache(batched_path)
+            fresh_s = PersistentCache(single_path)
+            assert dict(fresh_b.entries) == dict(fresh_s.entries) == model
+            assert {k: fresh_b.cost(k) for k in model} \
+                == {k: fresh_s.cost(k) for k in model} == costs
+
+    @given(records=RECORDS)
+    @settings(max_examples=25, deadline=None)
+    def test_pathless_put_many_matches_setitem(self, records):
+        pc = PersistentCache()
+        pc.put_many(records)
+        assert dict(pc.entries) == {k: v for k, (v, _) in records.items()}
+        assert pc.lock_roundtrips == 0  # nothing to lock without a log
+
+
+class TestLockEconomy:
+    @given(batches=st.lists(RECORDS, min_size=1, max_size=5))
+    @settings(max_examples=25, deadline=None)
+    def test_put_many_is_one_roundtrip_per_batch(self, batches):
+        """``lock_roundtrips`` never exceeds one per batch, no matter the
+        batch size or how many batches preceded it."""
+        with tempfile.TemporaryDirectory() as d:
+            pc = PersistentCache(os.path.join(d, "hcr.jsonl"))
+            base = pc.lock_roundtrips
+            for batch in batches:
+                before = pc.lock_roundtrips
+                pc.put_many(batch)
+                assert pc.lock_roundtrips == before + 1
+            assert pc.lock_roundtrips == base + len(batches)
+            pc.put_many({})  # empty batch: no lock at all
+            assert pc.lock_roundtrips == base + len(batches)
+
+    @given(written=RECORDS, lookups=st.lists(KEYS, min_size=1, max_size=6))
+    @settings(max_examples=25, deadline=None)
+    def test_get_many_is_at_most_one_roundtrip(self, written, lookups):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "hcr.jsonl")
+            writer, reader = PersistentCache(path), PersistentCache(path)
+            writer.put_many(written)
+            before = reader.lock_roundtrips
+            got = reader.get_many(lookups)
+            assert reader.lock_roundtrips <= before + 1
+            assert got == {k: written[k][0] for k in lookups
+                           if k in written}
+            # every key now in memory: the next batch takes no lock
+            before = reader.lock_roundtrips
+            reader.get_many(lookups)
+            assert reader.lock_roundtrips == before

@@ -83,6 +83,104 @@ class TestGridExpansion:
         assert spec2.expand() == spec.expand()
 
 
+def _zip_spec_dict(**overrides):
+    """Two workloads, each to be paired with its own fabric (the Fig 9
+    shape: a scale-out sweep where a cross product would mispair)."""
+    d = _spec_dict(
+        workloads=[
+            {"name": "w16", "stablehlo_path": "unused.mlir", "batch": 32,
+             "mesh": [16, 1]},
+            {"name": "w128", "stablehlo_path": "unused.mlir", "batch": 128,
+             "mesh": [128, 1]},
+        ],
+        topologies=[
+            {"kind": "a2a", "params": {"num_devices": 16}},
+            {"kind": "a2a", "params": {"num_devices": 128}},
+        ],
+        zip=[["workloads", "topologies"]])
+    d.update(overrides)
+    return d
+
+
+class TestZippedAxes:
+    def test_zip_pairs_elementwise(self):
+        spec = CampaignSpec.from_dict(_zip_spec_dict())
+        jobs = spec.expand()
+        # 2 zipped (workload ⊗ topology) × 2 systems × 2 est × 2 slicers
+        assert spec.num_points == len(jobs) == 16
+        pairs = {(j.workload, j.topology.label) for j in jobs}
+        assert pairs == {("w16", "a2a16"), ("w128", "a2a128")}
+
+    def test_zip_keeps_per_workload_overrides(self):
+        """The paired axis rides with each workload's own mesh/batch —
+        the per-scale overrides the Fig 9 grid needs."""
+        spec = CampaignSpec.from_dict(_zip_spec_dict())
+        by_name = {w.name: w for w in spec.workloads}
+        assert by_name["w16"].batch == 32 and by_name["w16"].mesh == (16, 1)
+        assert by_name["w128"].batch == 128 \
+            and by_name["w128"].mesh == (128, 1)
+
+    def test_unzipped_expansion_order_unchanged(self):
+        """With no zip groups the block expansion must enumerate exactly
+        the legacy cross product (golden job_ids depend on it)."""
+        import itertools
+        spec = CampaignSpec.from_dict(_spec_dict())
+        legacy = list(itertools.product(
+            spec.workloads, spec.systems, spec.estimators, spec.slicers,
+            spec.topologies, spec.overlap, spec.straggler_factor,
+            spec.compression))
+        jobs = spec.expand()
+        assert len(jobs) == len(legacy)
+        for job, (w, system, est, slicer, topo, ovl, strag, comp) in zip(
+                jobs, legacy):
+            assert (job.workload, job.system, job.estimator, job.slicer,
+                    job.topology, job.overlap, job.straggler_factor,
+                    job.compression) \
+                == (w.name, system, est, slicer, topo, ovl, strag, comp)
+
+    def test_zip_roundtrips_through_json(self, tmp_path):
+        spec = CampaignSpec.from_dict(_zip_spec_dict())
+        assert spec.to_dict()["zip"] == [["workloads", "topologies"]]
+        p = tmp_path / "spec.json"
+        p.write_text(json.dumps(spec.to_dict()))
+        assert CampaignSpec.from_json(str(p)).expand() == spec.expand()
+
+    def test_three_axis_zip_and_outer_product(self):
+        d = _zip_spec_dict(
+            systems=["a100", "h100"],
+            straggler_factor=[1.0, 1.5],
+            zip=[["workloads", "topologies", "straggler_factor"]])
+        spec = CampaignSpec.from_dict(d)
+        jobs = spec.expand()
+        assert len(jobs) == 2 * 2 * 2 * 2  # zip × systems × est × slicers
+        trip = {(j.workload, j.topology.label, j.straggler_factor)
+                for j in jobs}
+        assert trip == {("w16", "a2a16", 1.0), ("w128", "a2a128", 1.5)}
+
+    def test_zip_unequal_lengths_rejected(self):
+        d = _zip_spec_dict(topologies=[{"kind": "a2a"}])
+        with pytest.raises(ValueError, match="unequal lengths"):
+            CampaignSpec.from_dict(d)
+
+    def test_zip_unknown_axis_rejected(self):
+        d = _zip_spec_dict(zip=[["workloads", "fabrics"]])
+        with pytest.raises(ValueError, match="unknown axis 'fabrics'"):
+            CampaignSpec.from_dict(d)
+
+    def test_zip_axis_claimed_twice_rejected(self):
+        with pytest.raises(ValueError, match="more than one zip group"):
+            CampaignSpec.from_dict(_zip_spec_dict(
+                zip=[["workloads", "topologies"],
+                     ["topologies", "systems"]]))
+        with pytest.raises(ValueError, match="twice in one group"):
+            CampaignSpec.from_dict(_zip_spec_dict(
+                zip=[["workloads", "workloads"]]))
+
+    def test_zip_single_axis_group_rejected(self):
+        with pytest.raises(ValueError, match="at least two axes"):
+            CampaignSpec.from_dict(_zip_spec_dict(zip=[["workloads"]]))
+
+
 # ------------------------- execution (shared fixture) ----------------------
 
 
@@ -572,6 +670,33 @@ class TestCLI:
             cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
         assert p.returncode == 1
         assert "INVALID" in p.stdout
+
+    def test_cli_validate_rejects_bad_zip_groups(self, tmp_path):
+        """The validate surface catches both zip failure modes with a
+        clear message: paired axes of unequal lengths (the silent
+        mispairing hazard) and unknown axis names (typos)."""
+        base = {"name": "z", "workloads": [
+            {"name": "a", "stablehlo_path": "a.mlir"},
+            {"name": "b", "stablehlo_path": "b.mlir"}]}
+        unequal = tmp_path / "unequal.json"
+        unequal.write_text(json.dumps(
+            {**base, "topologies": [{"kind": "a2a"}],
+             "zip": [["workloads", "topologies"]]}))
+        typo = tmp_path / "typo.json"
+        typo.write_text(json.dumps(
+            {**base, "zip": [["workloads", "fabrics"]]}))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.campaign", "validate",
+             str(unequal), str(typo)],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+        assert p.returncode == 1
+        assert f"INVALID {unequal}" in p.stdout
+        assert "unequal lengths" in p.stdout \
+            and "workloads=2, topologies=1" in p.stdout
+        assert f"INVALID {typo}" in p.stdout
+        assert "unknown axis 'fabrics'" in p.stdout
 
     def test_cli_dry_run(self, toy_workload, tmp_path):
         ir_path = tmp_path / "toy.mlir"

@@ -52,7 +52,8 @@ def test_paper_full_suite_covers_figure_specs():
 
     suite = load_specs(os.path.join(REPO, "specs", "paper_full.json"))
     names = [n for n, _ in suite]
-    assert names == ["fig6-gpu", "fig7-resnet", "fig10-gemm", "fig11-tpu"]
+    assert names == ["fig6-gpu", "fig7-resnet", "fig9-scaleout",
+                     "fig10-gemm", "fig11-tpu"]
     # the suite must exercise every workload source family and both modes
     kinds = set()
     for _, spec in suite:

@@ -393,6 +393,17 @@ class TestSpecParity:
         provided = {w.name: tiny_llama_workload for w in spec.workloads}
         _assert_parity(spec, workloads=provided)
 
+    def test_fig9_scaleout_spec_parity(self, tiny_llama_workload):
+        """The zipped (workload ⊗ fabric) fig9 grid through the plan
+        path matches the per-job/per-region reference execution —
+        ``_reference_rows`` iterates ``spec.expand()``, so the paired
+        expansion itself is under parity too."""
+        spec = CampaignSpec.from_json(
+            os.path.join(SPECS, "fig9_scaleout.json"))
+        assert spec.zip_axes  # the paired-axis grid, not a cross product
+        provided = {w.name: tiny_llama_workload for w in spec.workloads}
+        _assert_parity(spec, workloads=provided)
+
     def test_fig7_resnet_spec_parity(self, tiny_resnet_workload):
         from tests.test_ir_parser import CANNED_HLO
         spec = CampaignSpec.from_json(

@@ -1,0 +1,522 @@
+"""The campaign report subsystem: rank statistics (Kendall-τ /
+Spearman-ρ), MAPE against recorded reference rows, fidelity-comparison
+tables, golden-prediction snapshots (drift + grid-shape + rank-inversion
+gates), the ``report`` CLI, and the paired-axis fig9 grid's parity with
+its pre-port in-script campaign."""
+import json
+import os
+
+import pytest
+
+from repro.campaign import CampaignSpec, run_campaign
+from repro.campaign import report as rpt
+from repro.campaign.__main__ import main as campaign_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPECS = os.path.join(REPO, "specs")
+
+#: the five checked-in paper grids and their campaign names
+CHECKED_IN = {
+    "fig6_gpu.json": "fig6-gpu",
+    "fig7_resnet.json": "fig7-resnet",
+    "fig9_scaleout.json": "fig9-scaleout",
+    "fig10_gemm.json": "fig10-gemm",
+    "fig11_tpu.json": "fig11-tpu",
+}
+
+
+def _row(workload, system, estimator, step, job_id=0, **over):
+    r = {"job_id": job_id, "workload": workload, "fidelity": "raw",
+         "system": system, "estimator": estimator, "slicer": "linear",
+         "topology": "a2a1", "overlap": False, "straggler_factor": 1.0,
+         "compression": 1.0, "step_time_s": step, "compute_s": step,
+         "comm_s": 0.0, "exposed_comm_s": 0.0, "num_segments": 1,
+         "num_comm": 0}
+    r.update(over)
+    return r
+
+
+# ----------------------------- rank statistics -----------------------------
+
+
+class TestRankStats:
+    def test_kendall_tau_perfect_and_inverted(self):
+        assert rpt.kendall_tau([1, 2, 3, 4], [10, 20, 30, 40]) == 1.0
+        assert rpt.kendall_tau([1, 2, 3, 4], [40, 30, 20, 10]) == -1.0
+
+    def test_kendall_tau_one_swap(self):
+        # 5 concordant, 1 discordant pair of 6 -> tau = 4/6
+        assert rpt.kendall_tau([1, 2, 3, 4], [1, 3, 2, 4]) \
+            == pytest.approx(4 / 6)
+
+    def test_kendall_tau_degenerate(self):
+        assert rpt.kendall_tau([], []) == 0.0
+        assert rpt.kendall_tau([1.0], [2.0]) == 0.0
+        assert rpt.kendall_tau([1, 1, 1], [1, 2, 3]) == 0.0  # all ties in x
+
+    def test_kendall_tau_tie_correction(self):
+        # x has one tied pair: tau_b denominator shrinks accordingly
+        tau = rpt.kendall_tau([1, 1, 2], [1, 2, 3])
+        assert tau == pytest.approx(2 / (3 * 2) ** 0.5 / 1)
+        import math
+        assert tau == pytest.approx(2 / math.sqrt(2 * 3))
+
+    def test_spearman_perfect_monotone_nonlinear(self):
+        # rho is rank-based: any monotone map preserves 1.0
+        assert rpt.spearman_rho([1, 2, 3, 4], [1, 8, 27, 1000]) == \
+            pytest.approx(1.0)
+        assert rpt.spearman_rho([1, 2, 3], [9, 4, 1]) == pytest.approx(-1.0)
+
+    def test_spearman_ties_averaged(self):
+        assert rpt._ranks([10.0, 20.0, 20.0, 30.0]) == [1.0, 2.5, 2.5, 4.0]
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            rpt.kendall_tau([1], [1, 2])
+        with pytest.raises(ValueError):
+            rpt.spearman_rho([1], [1, 2])
+
+
+# ----------------------------- report sections -----------------------------
+
+
+def _two_estimator_rows(invert_on_h100=False):
+    """Two workloads × two systems × two estimators.  Estimator `b` is
+    uniformly 2× slower; with ``invert_on_h100`` it inverts the system
+    ordering for workload w1."""
+    rows, jid = [], 0
+    for w, base in (("w1", 1.0), ("w2", 4.0)):
+        for s, factor in (("a100", 1.0), ("h100", 0.5)):
+            for est, scale in (("ana", 1.0), ("b", 2.0)):
+                step = base * factor * scale
+                if invert_on_h100 and (w, s, est) == ("w1", "h100", "b"):
+                    step = base * 3.0  # slower than its a100 sibling
+                rows.append(_row(w, s, est, step, job_id=jid))
+                jid += 1
+    return rows
+
+
+class TestReportSections:
+    def test_mape_hand_computed(self):
+        rows = [_row("w", "a100", "ana", 1.1, job_id=0),
+                _row("w", "a100", "prof", 0.8, job_id=1)]
+        reference = {"source": "unit", "rows": [
+            {"workload": "w", "system": "a100", "step_time_s": 1.0}]}
+        acc = rpt.mape_against_reference(rows, reference)
+        assert acc["reference_source"] == "unit"
+        assert acc["mape_pct"]["ana"]["overall"] == pytest.approx(10.0)
+        assert acc["mape_pct"]["prof"]["overall"] == pytest.approx(20.0)
+        assert acc["mape_pct"]["ana"]["matched_rows"] == 1
+
+    def test_mape_skips_unmatched_rows(self):
+        rows = [_row("w", "a100", "ana", 1.0), _row("x", "a100", "ana", 9.9)]
+        acc = rpt.mape_against_reference(rows, {"rows": [
+            {"workload": "w", "system": "a100", "step_time_s": 1.0}]})
+        assert acc["mape_pct"]["ana"]["matched_rows"] == 1
+        assert acc["mape_pct"]["ana"]["overall"] == 0.0
+
+    def test_rank_preservation_preserved(self):
+        rp = rpt.rank_preservation(_two_estimator_rows())
+        assert rp["all_trends_preserved"] is True
+        assert rp["min_kendall_tau"] == 1.0
+        assert rp["systems"]["w1"]["ana vs b"]["kendall_tau"] == 1.0
+        assert rp["workloads"]["a100"]["ana vs b"]["spearman_rho"] == 1.0
+
+    def test_rank_preservation_detects_inversion(self):
+        rp = rpt.rank_preservation(_two_estimator_rows(invert_on_h100=True))
+        assert rp["all_trends_preserved"] is False
+        assert rp["systems"]["w1"]["ana vs b"]["kendall_tau"] == -1.0
+
+    def test_trend_orderings(self):
+        t = rpt.trend_orderings(_two_estimator_rows())
+        assert t["systems"]["w1"]["ana"] == ["h100", "a100"]
+        assert t["workloads"]["h100"]["b"] == ["w1", "w2"]
+
+    def test_reference_estimator_is_lowest_job_id(self):
+        rows = [_row("w", "a100", "zzz", 1.0, job_id=0),
+                _row("w", "a100", "aaa", 2.0, job_id=1)]
+        assert rpt.reference_estimator(rows) == "zzz"
+
+    def test_fidelity_table_ratios(self):
+        fc = rpt.fidelity_table(_two_estimator_rows())
+        assert fc["reference_estimator"] == "ana"
+        cell = next(r for r in fc["rows"]
+                    if (r["workload"], r["system"]) == ("w1", "a100"))
+        assert cell["ratio_vs_reference"]["b"] == pytest.approx(2.0)
+        assert cell["ratio_vs_reference"]["ana"] == pytest.approx(1.0)
+
+    def test_build_report_and_markdown(self):
+        rows = _two_estimator_rows()
+        reference = {"source": "unit", "rows": [
+            {"workload": "w1", "system": "a100", "step_time_s": 1.0}]}
+        report = rpt.build_report("unit-grid", rows, reference=reference)
+        assert report["num_ok"] == len(rows)
+        md = rpt.render_markdown(report)
+        assert "# Campaign report: unit-grid" in md
+        assert "Rank preservation" in md and "Fidelity comparison" in md
+        assert "Accuracy vs recorded reference" in md
+
+    def test_error_rows_excluded_but_counted(self):
+        rows = _two_estimator_rows()
+        rows.append({"job_id": 99, "workload": "w1", "system": "a100",
+                     "estimator": "ana", "error": "boom"})
+        report = rpt.build_report("unit-grid", rows)
+        assert report["num_failed"] == 1
+        assert report["num_ok"] == len(rows) - 1
+
+
+# --------------------------- golden-snapshot gate ---------------------------
+
+
+class TestGoldenCheck:
+    def _golden(self, rows, tolerance=0.05):
+        return rpt.make_golden("g", rows, tolerance=tolerance)
+
+    def test_identity_passes(self):
+        rows = _two_estimator_rows()
+        check = rpt.check_rows(self._golden(rows), rows)
+        assert check["failures"] == []
+        assert check["rows_checked"] == len(rows)
+
+    def test_drift_within_tolerance_passes(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows, tolerance=0.05)
+        moved = [dict(r, step_time_s=r["step_time_s"] * 1.01) for r in rows]
+        assert rpt.check_rows(golden, moved)["failures"] == []
+
+    def test_drift_beyond_tolerance_fails(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows, tolerance=0.05)
+        moved = [dict(r) for r in rows]
+        moved[0]["step_time_s"] *= 1.2
+        failures = rpt.check_rows(golden, moved)["failures"]
+        assert len(failures) == 1 and "step_time_s drifted" in failures[0]
+
+    def test_tolerance_override_wins(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows, tolerance=0.05)
+        moved = [dict(r, step_time_s=r["step_time_s"] * 1.01) for r in rows]
+        failures = rpt.check_rows(golden, moved, tolerance=1e-6)["failures"]
+        assert failures and all("drifted" in f for f in failures)
+
+    def test_count_fields_compare_exactly(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows)
+        moved = [dict(r) for r in rows]
+        moved[0]["num_comm"] += 1
+        failures = rpt.check_rows(golden, moved)["failures"]
+        assert len(failures) == 1 and "num_comm changed" in failures[0]
+
+    def test_grid_shape_changes_fail(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows)
+        missing = rpt.check_rows(golden, rows[:-1])["failures"]
+        assert any("missing from fresh run" in f for f in missing)
+        extra = rows + [_row("w9", "a100", "ana", 1.0, job_id=77)]
+        added = rpt.check_rows(golden, extra)["failures"]
+        assert any("not in golden snapshot" in f for f in added)
+
+    def test_rank_inversion_fails_even_within_tolerance(self):
+        """The paper's headline claim is the gate's sharpest edge: two
+        predictions may each drift within tolerance while *swapping
+        order* — that must still fail."""
+        rows = [_row("w", "a100", "ana", 1.000, job_id=0),
+                _row("w", "h100", "ana", 1.001, job_id=1)]
+        golden = self._golden(rows, tolerance=0.05)
+        swapped = [dict(rows[0], step_time_s=1.001),
+                   dict(rows[1], step_time_s=1.000)]
+        failures = rpt.check_rows(golden, swapped)["failures"]
+        assert len(failures) == 1 and "rank inversion" in failures[0]
+        assert "['a100', 'h100']" in failures[0]
+
+    def test_error_rows_fail_check(self):
+        rows = _two_estimator_rows()
+        golden = self._golden(rows)
+        broken = rows[:-1] + [{"job_id": 99, "workload": "w2",
+                               "error": "boom"}]
+        failures = rpt.check_rows(golden, broken)["failures"]
+        assert any("failed: boom" in f for f in failures)
+
+    def test_make_golden_refuses_failing_campaign(self):
+        rows = [_row("w", "a100", "ana", 1.0),
+                {"job_id": 1, "workload": "w", "error": "boom"}]
+        with pytest.raises(ValueError, match="refusing to snapshot"):
+            rpt.make_golden("g", rows)
+
+    def test_ambiguous_row_keys_refused_and_flagged(self):
+        """Two topologies of one kind without a num_devices param share a
+        label: their grid points collapse under row_key, so snapshotting
+        must refuse and the gate must flag rather than silently checking
+        half the grid."""
+        rows = [_row("w", "a100", "ana", 1.0, job_id=0,
+                     topology="dragonfly"),
+                _row("w", "a100", "ana", 2.0, job_id=1,
+                     topology="dragonfly")]
+        with pytest.raises(ValueError, match="not distinguishable"):
+            rpt.make_golden("g", rows)
+        golden = self._golden(rows[:1])
+        failures = rpt.check_rows(golden, rows)["failures"]
+        assert any("duplicate fresh grid point" in f for f in failures)
+
+    def test_tied_orderings_are_row_order_independent(self):
+        """Exact ties break by name on both sides, so a golden (sorted
+        by row key) and a fresh run (job order) never disagree about an
+        unchanged, tied prediction set."""
+        tied = [_row("w", "a100", "ana", 1.0, job_id=0),
+                _row("w", "h100", "ana", 1.0, job_id=1)]
+        fwd = rpt.trend_orderings(tied)
+        rev = rpt.trend_orderings(list(reversed(tied)))
+        assert fwd == rev
+        assert fwd["systems"]["w"]["ana"] == ["a100", "h100"]
+        assert rpt.check_rows(self._golden(tied),
+                              list(reversed(tied)))["failures"] == []
+
+    def test_make_reference_records_reference_estimator(self):
+        rows = _two_estimator_rows()
+        ref = rpt.make_reference("g", rows)
+        assert ref["estimator"] == "ana"
+        vals = {(r["workload"], r["system"]): r["step_time_s"]
+                for r in ref["rows"]}
+        assert vals[("w1", "a100")] == pytest.approx(1.0)
+        assert len(vals) == 4
+
+
+# ------------------------- checked-in golden surface ------------------------
+
+
+class TestCheckedInGoldens:
+    """The five paper grids each carry a golden snapshot + recorded
+    reference whose grid points exactly match the spec expansion."""
+
+    @pytest.mark.parametrize("spec_file,name", sorted(CHECKED_IN.items()))
+    def test_golden_and_reference_exist_and_match_grid(self, spec_file,
+                                                       name):
+        spec = CampaignSpec.from_json(os.path.join(SPECS, spec_file))
+        assert spec.name == name
+        golden = rpt.load_json(rpt.golden_path(
+            os.path.join(SPECS, spec_file), name))
+        assert golden is not None, f"missing golden for {name}"
+        reference = rpt.load_json(rpt.reference_path(
+            os.path.join(SPECS, spec_file), name))
+        assert reference is not None, f"missing reference for {name}"
+        expected = {
+            (j.workload, j.fidelity, j.system, j.estimator.label, j.slicer,
+             j.topology.label, j.overlap, j.straggler_factor,
+             j.compression)
+            for j in spec.expand()}
+        got = {rpt.row_key(r) for r in golden["rows"]}
+        assert got == expected
+        assert 0 < float(golden["tolerance"]) <= 0.05
+        # reference rows cover every (workload, system) cell of the grid
+        cells = {(j.workload, j.system) for j in spec.expand()}
+        ref_cells = {(r["workload"], r["system"])
+                     for r in reference["rows"]}
+        assert ref_cells == cells
+
+    def test_fig9_golden_uses_zip(self):
+        """The fig9 snapshot must cover the *paired* grid: each workload
+        appears only with its own fabric's predictions (16-GPU and
+        128-GPU jobs have different comm profiles)."""
+        golden = rpt.load_json(os.path.join(SPECS, "golden",
+                                            "fig9-scaleout.json"))
+        by_wl = {}
+        for r in golden["rows"]:
+            if r["estimator"] == "roofline":
+                by_wl[r["workload"]] = r
+        assert set(by_wl) == {"llama2-16", "llama2-128"}
+        assert by_wl["llama2-16"]["comm_s"] \
+            != by_wl["llama2-128"]["comm_s"]
+
+    def test_fig10_golden_end_to_end(self):
+        """The jax-free grid re-runs quickly: fresh predictions must pass
+        their own checked-in gate (the CI golden job's core path)."""
+        spec = CampaignSpec.from_json(os.path.join(SPECS,
+                                                   "fig10_gemm.json"))
+        golden = rpt.load_json(os.path.join(SPECS, "golden",
+                                            "fig10-gemm.json"))
+        res = run_campaign(spec, executor="serial")
+        check = rpt.check_rows(golden, res.rows)
+        assert check["failures"] == [], check["failures"]
+        assert check["rows_checked"] == spec.num_points == 24
+
+
+# --------------------------------- the CLI ---------------------------------
+
+
+@pytest.fixture()
+def tmp_specdir(tmp_path):
+    """A private copy of the fig10 spec so golden/reference writes land
+    in the test's own directory tree."""
+    import shutil
+    spec = tmp_path / "fig10_gemm.json"
+    shutil.copy(os.path.join(SPECS, "fig10_gemm.json"), spec)
+    return tmp_path
+
+
+class TestReportCLI:
+    def test_update_check_and_drift_cycle(self, tmp_specdir, capsys):
+        spec = str(tmp_specdir / "fig10_gemm.json")
+        out = str(tmp_specdir / "out")
+        rc = campaign_main(["report", spec, "--out", out, "--quiet",
+                            "--executor", "serial", "--update-golden",
+                            "--tolerance", "1e-6"])
+        assert rc == 0
+        gpath = tmp_specdir / "golden" / "fig10-gemm.json"
+        rpath = tmp_specdir / "references" / "fig10-gemm.json"
+        assert gpath.exists() and rpath.exists()
+        assert (tmp_specdir / "out" / "fig10-gemm" / "report.json").exists()
+        md = (tmp_specdir / "out" / "fig10-gemm" / "report.md").read_text()
+        assert "Golden-snapshot check" not in md  # no --check yet
+        # the seeding run itself already reports MAPE vs the reference
+        # it just recorded — no second invocation needed
+        assert "Accuracy vs recorded reference" in md
+
+        rc = campaign_main(["report", spec, "--out", out, "--quiet",
+                            "--executor", "serial", "--check"])
+        assert rc == 0
+        capsys.readouterr()
+
+        # corrupt one golden prediction: --check must fail loudly
+        golden = json.loads(gpath.read_text())
+        golden["rows"][0]["step_time_s"] *= 1.5
+        gpath.write_text(json.dumps(golden))
+        rc = campaign_main(["report", spec, "--out", out, "--quiet",
+                            "--executor", "serial", "--check"])
+        assert rc == 1
+        printed = capsys.readouterr().out
+        assert "GOLDEN-CHECK FAILURE" in printed and "drifted" in printed
+        md = (tmp_specdir / "out" / "fig10-gemm" / "report.md").read_text()
+        assert "**FAILED**" in md
+
+    def test_failed_rows_make_report_exit_nonzero(self, tmp_path, capsys):
+        """Like `run`, `report` must not exit 0 on a half-failed
+        campaign just because the surviving rows produced a report."""
+        hlo = tmp_path / "w.hlo"
+        hlo.write_text("HloModule w")
+        spec = tmp_path / "broken.json"
+        # fidelity "raw" with only optimized text: every grid point
+        # becomes a "no raw text" plan-error row
+        spec.write_text(json.dumps({
+            "name": "broken",
+            "workloads": [{"name": "w", "fidelity": "raw",
+                           "hlo_path": str(hlo)}],
+        }))
+        rc = campaign_main(["report", str(spec), "--quiet", "--executor",
+                            "serial", "--out", str(tmp_path / "out")])
+        assert rc == 1
+        assert "grid points failed" in capsys.readouterr().out
+
+    def test_check_without_golden_fails_with_hint(self, tmp_specdir,
+                                                  capsys):
+        spec = str(tmp_specdir / "fig10_gemm.json")
+        rc = campaign_main(["report", spec, "--quiet", "--executor",
+                            "serial", "--out",
+                            str(tmp_specdir / "out"), "--check"])
+        assert rc == 1
+        assert "--update-golden" in capsys.readouterr().out
+
+    def test_report_from_results_file(self, tmp_specdir):
+        """`report --results` rebuilds the same evaluation from streamed
+        rows without re-running (and without the estimator stack)."""
+        spec = str(tmp_specdir / "fig10_gemm.json")
+        out1 = str(tmp_specdir / "out1")
+        assert campaign_main(["report", spec, "--out", out1, "--quiet",
+                              "--executor", "serial"]) == 0
+        results = os.path.join(out1, "fig10-gemm", "results.jsonl")
+        out2 = str(tmp_specdir / "out2")
+        assert campaign_main(["report", spec, "--results", results,
+                              "--out", out2, "--quiet"]) == 0
+        r1 = json.loads((tmp_specdir / "out1" / "fig10-gemm" /
+                         "report.json").read_text())
+        r2 = json.loads((tmp_specdir / "out2" / "fig10-gemm" /
+                         "report.json").read_text())
+        for section in ("rank_preservation", "fidelity_comparison",
+                        "trend_orderings", "accuracy"):
+            assert r1.get(section) == r2.get(section)
+
+    def test_update_golden_keeps_existing_reference(self, tmp_specdir):
+        """References are recorded baselines: --update-golden must not
+        clobber one that exists (delete it to re-record)."""
+        spec = str(tmp_specdir / "fig10_gemm.json")
+        refdir = tmp_specdir / "references"
+        refdir.mkdir()
+        sentinel = {"campaign": "fig10-gemm", "source": "hand-recorded",
+                    "rows": [{"workload": "gemm-256", "system": "tpu-v3",
+                              "step_time_s": 1.0}]}
+        (refdir / "fig10-gemm.json").write_text(json.dumps(sentinel))
+        assert campaign_main(["report", spec, "--quiet", "--executor",
+                              "serial", "--out",
+                              str(tmp_specdir / "out"),
+                              "--update-golden"]) == 0
+        kept = json.loads((refdir / "fig10-gemm.json").read_text())
+        assert kept["source"] == "hand-recorded"
+
+
+# ------------------------ fig9 paired-axis parity ---------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_llama_workload():
+    """A tiny train-step export standing in for both fig9 scale points
+    (parity needs the real spec axes, not full-size 7B exports)."""
+    pytest.importorskip("jax")
+    from repro.core.pipeline import export_workload
+    from repro.models.registry import get_smoke_config
+    from repro.train.loop import train_step_exports
+
+    cfg = get_smoke_config("llama3-100m")
+    jitted, abs_args = train_step_exports(cfg, 32, 2, None)
+    return export_workload(jitted, *abs_args, name="tiny-llama")
+
+
+class TestFig9ZipParity:
+    def test_zip_grid_matches_pre_port_loop(self, tiny_llama_workload):
+        """Acceptance: the zipped fig9 spec is bit-identical to the
+        pre-port in-script campaign — one single-(workload, fabric)
+        campaign per scale, exactly as benchmarks/fig9_scaleout.py was
+        written before the port."""
+        spec = CampaignSpec.from_json(os.path.join(SPECS,
+                                                   "fig9_scaleout.json"))
+        provided = {w.name: tiny_llama_workload for w in spec.workloads}
+        zipped = run_campaign(spec, workloads=provided, executor="serial")
+        assert zipped.summary["num_failed"] == 0
+
+        ref_rows: list[dict] = []
+        for w, topo in zip(spec.workloads, spec.topologies):
+            sub = CampaignSpec(
+                name=f"fig9-{w.name}", workloads=[w],
+                systems=list(spec.systems),
+                estimators=list(spec.estimators),
+                slicers=list(spec.slicers), topologies=[topo])
+            res = run_campaign(sub, workloads={w.name: tiny_llama_workload},
+                               executor="thread")
+            assert res.summary["num_failed"] == 0
+            ref_rows.extend(res.ok_rows)
+
+        assert len(zipped.ok_rows) == len(ref_rows) == 4
+        ref = {(r["workload"], r["estimator"]): r for r in ref_rows}
+        for row in zipped.ok_rows:
+            expect = ref[(row["workload"], row["estimator"])]
+            for f in ("step_time_s", "compute_s", "comm_s",
+                      "exposed_comm_s", "num_segments", "num_comm",
+                      "topology", "fidelity"):
+                assert row[f] == expect[f], (row["workload"], f)
+
+    def test_fig9_spec_pairs_scales_with_fabrics(self):
+        spec = CampaignSpec.from_json(os.path.join(SPECS,
+                                                   "fig9_scaleout.json"))
+        assert spec.zip_axes == [("workloads", "topologies")]
+        jobs = spec.expand()
+        assert len(jobs) == 4  # 2 paired scales × 2 estimator fidelities
+        fabric_devices = {}
+        for j, w in ((j, w) for j in jobs for w in spec.workloads
+                     if w.name == j.workload):
+            p = j.topology.params_dict
+            fabric_devices[w.name] = (p["num_nodes"] * p["gpus_per_node"])
+        # each scale's fabric carries exactly that scale's GPU count
+        assert fabric_devices == {"llama2-16": 16, "llama2-128": 128}
+        by_name = {w.name: w for w in spec.workloads}
+        assert by_name["llama2-16"].mesh == (16, 1)
+        assert by_name["llama2-128"].mesh == (128, 1)
+        assert by_name["llama2-16"].batch == 32   # 2/GPU at 16 GPUs
+        assert by_name["llama2-128"].batch == 128  # 1/GPU at 128 GPUs
