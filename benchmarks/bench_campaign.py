@@ -54,12 +54,13 @@ def _grid_spec():
 
 
 def _run_grid(executor: str, workloads: dict) -> dict:
-    from repro.campaign import run_campaign
+    from repro import api
+    session = api.Session()
     with tempfile.TemporaryDirectory() as d:
         t0 = time.perf_counter()
-        res = run_campaign(_grid_spec(), workloads=workloads,
-                           executor=executor, max_workers=4,
-                           cache_path=os.path.join(d, "hcr.jsonl"))
+        res = session.campaign(_grid_spec(), workloads=workloads,
+                               executor=executor, max_workers=4,
+                               cache_path=os.path.join(d, "hcr.jsonl"))
         wall = time.perf_counter() - t0
     assert res.summary["num_failed"] == 0, res.summary["failures"]
     return {

@@ -28,12 +28,13 @@ SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
 
 
 def main() -> None:
-    from repro.campaign import CampaignSpec, run_campaign
+    from repro import api
     from repro.core.estimators import PRESETS
-    from repro.core.systems import TPU_V3_CORE
 
-    spec = CampaignSpec.from_json(SPEC)
-    res = run_campaign(spec, executor="serial")
+    session = api.Session()
+    TPU_V3_CORE = session.get_system("tpu-v3")
+    spec = api.load_spec(SPEC)
+    res = session.campaign(spec, executor="serial")
     assert res.summary["num_failed"] == 0, res.summary["failures"]
     lat = {(r["workload"], r["estimator"]): r["step_time_s"]
            for r in res.ok_rows}

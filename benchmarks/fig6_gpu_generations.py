@@ -25,20 +25,19 @@ SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
 
 def main() -> None:
     import jax
-    from repro.campaign import CampaignSpec, run_campaign
+    from repro import api
     from repro.core.estimators import ProfilingEstimator, RooflineEstimator
     from repro.core.network import AllToAllNode
-    from repro.core.pipeline import export_workload, predict
-    from repro.core.systems import host_system
     from repro.launch.mesh import make_mesh
 
+    session = api.Session()
+    host = session.get_system("host")
     rows = []
 
     # ---------------- host-validated structural claims ----------------
     # single device: multi-device emulation on one CPU core serializes
     # device work and turns FSDP all-gathers into giant memcpys, which
     # would confound the estimator-ordering claim being validated here
-    host = host_system()
     host_topo = AllToAllNode(num_devices=1,
                              link_bw=host.interconnect.link_bw,
                              link_latency=2e-6)
@@ -53,16 +52,17 @@ def main() -> None:
             cfg_overrides={"scan_layers": False, "layer_barriers": True,
                            "remat": "none", "num_layers": layers})
         with mesh1:
-            w = export_workload(jitted, *abs_args, name=arch)
+            w = session.export(jitted, *abs_args, name=arch)
             measured = measure(jitted, concrete(jax.random.PRNGKey(0)),
                                runs=2)
-        prog_opt = w.program("optimized")
-        prog_raw = w.program("raw")
-        p_ana = predict(prog_opt, RooflineEstimator(host), host_topo,
-                        slicer="linear", name=arch)
-        prof = ProfilingEstimator(program=prog_raw, runs=3)
-        p_prof = predict(prog_raw, prof, host_topo, slicer="linear",
-                         name=arch)
+        plan_opt = session.plan(w, slicer="linear", fidelity="optimized")
+        plan_raw = session.plan(w, slicer="linear", fidelity="raw")
+        p_ana = session.predict(plan_opt, system=host,
+                                estimator=RooflineEstimator(host),
+                                topology=host_topo)
+        prof = ProfilingEstimator(program=plan_raw.program, runs=3)
+        p_prof = session.predict(plan_raw, system=host, estimator=prof,
+                                 topology=host_topo)
         # profiling measures the whole-step region; add the measured
         # collective exposure from the optimized program's netsim pass
         prof_total = p_prof.step_time_s + p_ana.comm_s
@@ -88,10 +88,10 @@ def main() -> None:
     # pessimism mechanism as real profiling (compiler scope truncated at
     # region boundaries), without needing the target GPU.
     # Execution-based profiling is used in the host-validated rows above.
-    spec = CampaignSpec.from_json(SPEC)
+    spec = api.load_spec(SPEC)
     gens = list(spec.systems)
     archs = [w.name for w in spec.workloads]
-    res = run_campaign(spec, executor="thread")
+    res = session.campaign(spec, executor="thread")
     idx = {(r["workload"], r["system"], r["estimator"]): r
            for r in res.ok_rows}
     preds: dict[str, dict[str, float]] = {g: {} for g in gens}

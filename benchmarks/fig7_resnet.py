@@ -55,14 +55,14 @@ def _build(depth: int, batch: int, img: int, mesh, barriers: bool = False):
 
 def main() -> None:
     import jax
+    from repro import api
     from repro.core.estimators import ProfilingEstimator, RooflineEstimator
     from repro.core.network import AllToAllNode
-    from repro.core.pipeline import export_workload, predict
-    from repro.core.systems import host_system
     from repro.launch.mesh import make_mesh
 
+    session = api.Session()
     mesh = make_mesh((4, 1), ("data", "model"))
-    host = host_system()
+    host = session.get_system("host")
     host_topo = AllToAllNode(num_devices=4,
                              link_bw=host.interconnect.link_bw)
     rows = []
@@ -72,16 +72,17 @@ def main() -> None:
         jitted, abs_args, concrete = _build(depth, batch=8, img=64,
                                             mesh=mesh)
         with mesh:
-            w = export_workload(jitted, *abs_args, name=f"resnet{depth}")
+            w = session.export(jitted, *abs_args, name=f"resnet{depth}")
             measured = measure(jitted, concrete(jax.random.PRNGKey(0)),
                                runs=3)
-        prog_opt = w.program("optimized")
-        prog_raw = w.program("raw")
-        p_ana = predict(prog_opt, RooflineEstimator(host), host_topo,
-                        slicer="linear", name=f"resnet{depth}")
-        prof = ProfilingEstimator(program=prog_raw, runs=3)
-        p_prof = predict(prog_raw, prof, host_topo, slicer="linear",
-                         name=f"resnet{depth}")
+        plan_opt = session.plan(w, slicer="linear", fidelity="optimized")
+        plan_raw = session.plan(w, slicer="linear", fidelity="raw")
+        p_ana = session.predict(plan_opt, system=host,
+                                estimator=RooflineEstimator(host),
+                                topology=host_topo)
+        prof = ProfilingEstimator(program=plan_raw.program, runs=3)
+        p_prof = session.predict(plan_raw, system=host, estimator=prof,
+                                 topology=host_topo)
         prof_total = p_prof.step_time_s + p_ana.comm_s
         rows.append({
             "name": f"fig7-host-resnet{depth}",
@@ -98,10 +99,7 @@ def main() -> None:
     # full-scale A100 predictions (paper config: 256/device, fp16, 224px)
     # — one campaign from the checked-in spec; the engine exports the
     # train steps itself (mode="train")
-    from repro.campaign import CampaignSpec, run_campaign
-
-    spec = CampaignSpec.from_json(SPEC)
-    res = run_campaign(spec, executor="serial")
+    res = session.campaign(SPEC, executor="serial")
     assert res.summary["num_failed"] == 0, res.summary["failures"]
     for r in res.ok_rows:
         rows.append({

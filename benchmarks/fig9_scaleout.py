@@ -25,10 +25,11 @@ SPEC = os.path.join(os.path.dirname(__file__), "..", "specs",
 
 
 def main() -> None:
-    from repro.campaign import CampaignSpec, run_campaign
+    from repro import api
 
-    spec = CampaignSpec.from_json(SPEC)
-    res = run_campaign(spec, executor="thread")
+    session = api.Session()
+    spec = api.load_spec(SPEC)
+    res = session.campaign(spec, executor="thread")
     assert res.summary["num_failed"] == 0, res.summary["failures"]
     idx = {(r["workload"], r["estimator"]): r for r in res.ok_rows}
 

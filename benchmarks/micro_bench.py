@@ -20,20 +20,22 @@ def _time(fn, n=3) -> float:
 def main() -> None:
     import jax
     import jax.numpy as jnp
+    from repro import api
     from repro.core.estimators import RooflineEstimator, SystolicEstimator
     from repro.core.ir import parse, program_cost
     from repro.core.network import Torus, simulate
-    from repro.core.pipeline import export_workload, predict
+    from repro.core.pipeline import predict
     from repro.core.slicing import dependency_aware_split, linear_split
-    from repro.core.systems import TPU_V5E
     from repro.launch.mesh import make_mesh
 
+    session = api.Session()
+    TPU_V5E = session.get_system("tpu-v5e")
     rows = []
     mesh = make_mesh((4, 1), ("data", "model"))
     cfg, jitted, abs_args, _ = build_llama_step(
         "llama3-100m", seq=512, batch=4, mesh=mesh, train=True)
     with mesh:
-        w = export_workload(jitted, *abs_args, name="llama3-100m")
+        w = session.export(jitted, *abs_args, name="llama3-100m")
 
     hlo = w.hlo_text
     t = _time(lambda: parse(hlo))

@@ -1,4 +1,4 @@
-"""Cross-architecture campaign sweep via the Python API.
+"""Cross-architecture campaign sweep via the stable ``repro.api`` facade.
 
 One exported workload costed over systems × estimator fidelities ×
 slicers in parallel, with a persistent (H, C, R) cache shared across
@@ -13,11 +13,9 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.campaign import (CampaignSpec, EstimatorSpec, WorkloadSpec,
-                            run_campaign)
+from repro import api
 from repro.campaign.summary import format_table
 from repro.configs.base import ShapeConfig
-from repro.core.pipeline import export_workload
 from repro.models import get_config, input_specs, model_specs
 from repro.models.params import abstract_params
 from repro.models.transformer import forward
@@ -32,32 +30,35 @@ def main() -> None:
                     choices=("serial", "thread", "process"))
     ap.add_argument("--out", default="artifacts/campaign_sweep")
     ap.add_argument("--cache", default="artifacts/campaign_sweep/hcr.json")
+    ap.add_argument("--systems", action="append", default=[],
+                    help="extra system-catalog file/dir (JSON records)")
     args = ap.parse_args()
+
+    session = api.Session(systems=args.systems, cache_path=args.cache)
 
     cfg = get_config(args.arch)
     shape = ShapeConfig("sweep", args.seq, args.batch, "train")
-    w = export_workload(
+    w = session.export(
         jax.jit(lambda p, b: forward(cfg, p, b)),
         abstract_params(model_specs(cfg)), input_specs(cfg, shape),
         name=args.arch)
 
     # the workload is provided in-memory below, so its spec is name-only
-    spec = CampaignSpec(
-        name=f"sweep-{args.arch}",
-        workloads=[WorkloadSpec(name=args.arch)],
-        systems=["a100", "h100", "b200", "tpu-v5e"],
-        estimators=[
-            EstimatorSpec.from_dict({"kind": "roofline"}),
-            EstimatorSpec.from_dict(
+    result = session.campaign(
+        {
+            "name": f"sweep-{args.arch}",
+            "workloads": [{"name": args.arch}],
+            "systems": ["a100", "h100", "b200", "tpu-v5e"],
+            "estimators": [
+                {"kind": "roofline"},
                 {"kind": "roofline", "fidelity": "raw",
-                 "options": {"mode": "per-op", "include_overheads": True}}),
-            EstimatorSpec.from_dict(
-                {"kind": "mixed", "options": {"preset": "cocossim"}}),
-        ],
-        slicers=["linear", "dep"],
-    )
-    result = run_campaign(spec, workloads={args.arch: w}, out_dir=args.out,
-                          executor=args.executor, cache_path=args.cache)
+                 "options": {"mode": "per-op", "include_overheads": True}},
+                {"kind": "mixed", "options": {"preset": "cocossim"}},
+            ],
+            "slicers": ["linear", "dep"],
+        },
+        workloads={args.arch: w}, out_dir=args.out,
+        executor=args.executor)
     print(format_table(result.summary))
     print(f"rows: {result.csv_path}")
 

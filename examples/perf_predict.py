@@ -9,13 +9,9 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.estimators import (MixedEstimator, RooflineEstimator,
-                                   SystolicEstimator)
-from repro.core.network import AllToAllNode, Torus
-from repro.core.pipeline import export_workload, predict
-from repro.core.systems import get_system
+from repro import api
+from repro.campaign.spec import TopologySpec
 from repro.models import get_config, input_specs, model_specs
 from repro.models.params import abstract_params
 from repro.models.transformer import forward
@@ -29,23 +25,25 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     args = ap.parse_args()
 
+    session = api.Session()
     cfg = get_config(args.arch)
     shape = ShapeConfig("whatif", args.seq, args.batch, "train")
     params_abs = abstract_params(model_specs(cfg))
     batch_abs = input_specs(cfg, shape)
-    w = export_workload(jax.jit(lambda p, b: forward(cfg, p, b)),
-                        params_abs, batch_abs, name=args.arch)
-    prog = w.program("optimized")
+    w = session.export(jax.jit(lambda p, b: forward(cfg, p, b)),
+                       params_abs, batch_abs, name=args.arch)
+    plan = session.plan(w, slicer="linear")
 
     print(f"{'system':12s} {'roofline':>12s} {'systolic+roofline':>18s}")
     for name in ("a100", "h100", "b200", "tpu-v3", "tpu-v5e"):
-        system = get_system(name)
-        topo = Torus(dims=(2, 2)) if "tpu" in name \
-            else AllToAllNode(num_devices=4)
-        ana = predict(prog, RooflineEstimator(system), topo).step_time_s
-        mixed = MixedEstimator(SystolicEstimator(system, "cocossim"),
-                               RooflineEstimator(system))
-        sysl = predict(prog, mixed, topo).step_time_s
+        tspec = TopologySpec.from_dict(
+            {"kind": "torus", "params": {"dims": [2, 2]}} if "tpu" in name
+            else {"kind": "a2a", "params": {"num_devices": 4}})
+        ana = session.predict(plan, system=name, estimator="roofline",
+                              topology=tspec).step_time_s
+        sysl = session.predict(plan, system=name, estimator="mixed",
+                               options={"preset": "cocossim"},
+                               topology=tspec).step_time_s
         print(f"{name:12s} {ana*1e3:10.2f}ms {sysl*1e3:16.2f}ms")
 
 

@@ -9,11 +9,8 @@ sys.path.insert(0, "src")
 
 import jax
 
+from repro import api
 from repro.configs.base import RunConfig, ShapeConfig
-from repro.core.estimators import RooflineEstimator
-from repro.core.network import Torus
-from repro.core.pipeline import export_workload, predict
-from repro.core.systems import TPU_V5E
 from repro.models import get_smoke_config, model_specs
 from repro.models.params import abstract_params
 from repro.train import train
@@ -46,10 +43,13 @@ def main() -> None:
     init_fn, _ = make_optimizer(opt_cfg)
     opt_abs = jax.eval_shape(lambda p: init_fn(p, opt_cfg), params_abs)
     batch_abs = input_specs(cfg, run.shape)
-    w = export_workload(jax.jit(step), params_abs, opt_abs, batch_abs,
-                        name="quickstart")
-    p = predict(w.program("optimized"), RooflineEstimator(TPU_V5E),
-                Torus(dims=(16, 16)), slicer="linear", name="quickstart")
+    session = api.Session()
+    w = session.export(jax.jit(step), params_abs, opt_abs, batch_abs,
+                       name="quickstart")
+    p = session.predict(w, system="tpu-v5e", estimator="roofline",
+                        topology="torus",
+                        topology_params={"dims": (16, 16)},
+                        slicer="linear")
     print(f"predicted v5e step time: {p.step_time_s*1e6:.1f} us "
           f"({p.num_segments} regions, {p.num_comm} collectives; "
           f"simulated in {p.simulation_wall_s:.2f}s wall)")

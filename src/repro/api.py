@@ -1,0 +1,266 @@
+"""Stable public facade over the prediction pipeline.
+
+Everything a consumer needs — exporting workloads, building plans,
+single predictions, campaigns, and extending the three open vocabularies
+(estimator kinds, topology kinds, system catalog) — behind one
+documented entry point, so the pipeline internals can keep evolving
+without breaking downstream code::
+
+    from repro import api
+
+    session = api.Session(cache_path=".cache/hcr.jsonl")
+    w = session.export(jitted_step, params_abs, batch_abs, name="llama")
+    p = session.predict(w, system="h100", estimator="roofline")
+    result = session.campaign("specs/fig6_gpu.json", executor="thread")
+
+A :class:`Session` owns *scoped* registries (they overlay the global
+ones without mutating them) plus the shared (H, C, R) cache store.
+Third-party backends register either globally::
+
+    from repro.api import register_estimator
+
+    @register_estimator("my-sim")
+    class MySim(...):
+        @classmethod
+        def from_spec(cls, options, system, context): ...
+
+or per session (``session.register_estimator("my-sim")(MySim)``,
+``session.register_system("my-chip", {...})``) — campaign specs then use
+the new kinds/ids like any builtin.  See ``docs/extending.md`` for the
+full walkthrough.
+
+This module imports only stdlib-weight parts of the package at load
+time; jax/numpy are pulled in lazily by the methods that need them.
+"""
+from __future__ import annotations
+
+import os
+
+from .core.catalog import SystemRegistry, default_registry
+from .core.registry import (ESTIMATORS, TOPOLOGIES, BuildContext, Registry,
+                            register_estimator, register_topology)
+from .core.systems import Interconnect, System, host_system
+
+__all__ = [
+    "Session", "System", "Interconnect", "SystemRegistry", "Registry",
+    "register_estimator", "register_topology", "host_system",
+]
+
+
+class Session:
+    """Registries + cache store + the pipeline verbs that use them.
+
+    ``systems`` seeds extra catalog paths (files or directories of
+    system JSON records); ``cache_path`` backs every prediction and
+    campaign run with one persistent (H, C, R) store.
+    """
+
+    def __init__(self, *, systems: list[str] | tuple = (),
+                 cache_path: str | None = None):
+        self.estimators = ESTIMATORS.scope()
+        self.topologies = TOPOLOGIES.scope()
+        self.systems = default_registry().scope()
+        for p in systems:
+            self.systems.load_path(p)
+        self.cache_path = cache_path
+        self._store = None
+
+    # ------------------------- extension surface -------------------------
+
+    def register_estimator(self, kind: str, cls: type | None = None, *,
+                           replace: bool = False):
+        """Session-scoped :func:`repro.api.register_estimator`."""
+        return self.estimators.register(kind, cls, replace=replace)
+
+    def register_topology(self, kind: str, cls: type | None = None, *,
+                          replace: bool = False):
+        """Session-scoped :func:`repro.api.register_topology`."""
+        return self.topologies.register(kind, cls, replace=replace)
+
+    def register_system(self, sid: str, system: System | dict, *,
+                        replace: bool = False) -> System:
+        """Add a system (object or catalog-record dict) under id ``sid``."""
+        return self.systems.register(sid, system, replace=replace)
+
+    def load_systems(self, path: str) -> list[str]:
+        """Load a catalog file or directory; returns the new ids."""
+        return self.systems.load_path(path)
+
+    def get_system(self, name: str) -> System:
+        return self.systems.get(name)
+
+    # --------------------------- cache store ---------------------------
+
+    @property
+    def cache_store(self):
+        """The session's shared (H, C, R) store (created lazily; an
+        in-memory dict when the session has no ``cache_path``)."""
+        if self._store is None:
+            if self.cache_path:
+                from .core.estimators.cache import PersistentCache
+                self._store = PersistentCache(self.cache_path)
+            else:
+                self._store = {}
+        return self._store
+
+    def flush_cache(self) -> None:
+        """Compact the persistent store (no-op without a ``cache_path``)."""
+        from .core.estimators.cache import PersistentCache
+        if isinstance(self._store, PersistentCache) and self.cache_path:
+            self._store.save(self.cache_path)
+
+    # ------------------------- pipeline verbs -------------------------
+
+    def export(self, jitted, *specs, name: str = "workload", **kw):
+        """Export a jitted function's StableHLO/HLO pair (paper stage a);
+        see :func:`repro.core.pipeline.export_workload`."""
+        from .core.pipeline import export_workload
+        return export_workload(jitted, *specs, name=name, **kw)
+
+    def workload(self, *, name: str, stablehlo: str | None = None,
+                 hlo: str | None = None,
+                 stablehlo_path: str | None = None,
+                 hlo_path: str | None = None):
+        """Wrap IR text (or text files) as a Workload without jax."""
+        from .core.pipeline import Workload
+        if stablehlo_path:
+            with open(stablehlo_path) as f:
+                stablehlo = f.read()
+        if hlo_path:
+            with open(hlo_path) as f:
+                hlo = f.read()
+        return Workload(name=name, stablehlo_text=stablehlo, hlo_text=hlo)
+
+    def plan(self, workload, *, slicer: str = "linear",
+             fidelity: str | None = None):
+        """Parse + slice once into a reusable PredictionPlan (the
+        pipeline's plan phase; see :func:`repro.core.pipeline.build_plan`)."""
+        from .core.pipeline import build_plan
+        fidelity = fidelity or (
+            "optimized" if workload.hlo_text else "raw")
+        return build_plan(workload.program(fidelity), slicer=slicer,
+                          name=workload.name, fidelity=fidelity)
+
+    def predict(self, workload, *, system="a100", estimator="roofline",
+                options: dict | None = None, fidelity: str | None = None,
+                slicer: str = "linear", topology="auto",
+                topology_params: dict | None = None, overlap: bool = False,
+                straggler_factor: float = 1.0, compression: float = 1.0,
+                use_cache: bool = True):
+        """One grid point: cost ``workload`` (a Workload or a prebuilt
+        PredictionPlan) on ``system`` with ``estimator`` over
+        ``topology``, all resolved through the session's registries.
+
+        ``system`` is a catalog id or a :class:`System`; ``estimator`` a
+        registered kind name (with ``options``), an EstimatorSpec, or a
+        live ComputeEstimator; ``topology`` a registered kind name (with
+        ``topology_params``), a TopologySpec, or a live Topology."""
+        from .campaign.builders import build_estimator, build_topology
+        from .campaign.spec import EstimatorSpec, TopologySpec
+        from .core.estimators.base import ComputeEstimator
+        from .core.network import Topology
+        from .core.pipeline import PredictionJob, PredictionPlan
+
+        if isinstance(system, System):
+            sysm, system_name = system, system.name
+        else:
+            sysm, system_name = self.systems.get(system), system
+
+        if isinstance(workload, PredictionPlan):
+            plan = workload
+        else:
+            plan = self.plan(workload, slicer=slicer, fidelity=fidelity)
+
+        context = BuildContext(
+            system_name=system_name, program=plan.program,
+            estimators=self.estimators, topologies=self.topologies,
+            systems=self.systems)
+        if isinstance(estimator, str):
+            estimator = EstimatorSpec(
+                kind=estimator,
+                options=tuple(sorted((options or {}).items())))
+        if isinstance(estimator, EstimatorSpec):
+            est = build_estimator(estimator, sysm,
+                                  registry=self.estimators, context=context)
+        elif isinstance(estimator, ComputeEstimator):
+            est = estimator
+        else:
+            raise TypeError(f"estimator: expected kind name, EstimatorSpec "
+                            f"or ComputeEstimator, got {estimator!r}")
+        if isinstance(topology, str):
+            topology = TopologySpec(
+                kind=topology,
+                params=tuple(sorted((topology_params or {}).items())))
+        if isinstance(topology, TopologySpec):
+            topo = build_topology(topology, sysm,
+                                  registry=self.topologies, context=context)
+        elif isinstance(topology, Topology):
+            topo = topology
+        else:
+            raise TypeError(f"topology: expected kind name, TopologySpec "
+                            f"or Topology, got {topology!r}")
+
+        job = PredictionJob(
+            estimator=est, topology=topo, slicer=plan.slicer,
+            overlap=overlap, straggler_factor=straggler_factor,
+            compression=compression, name=plan.name, use_cache=use_cache,
+            system_name=sysm.name, cache_store=self.cache_store, plan=plan)
+        return job.run()
+
+    def campaign(self, spec, *, workloads: dict | None = None,
+                 out_dir: str | None = None, executor: str = "serial",
+                 max_workers: int | None = None,
+                 cache_path: str | None = None,
+                 schedule: str = "locality", progress: bool = False):
+        """Run a campaign grid through the session's registries.
+
+        ``spec`` is a CampaignSpec, a spec dict, or a path to a spec
+        JSON; everything else mirrors
+        :func:`repro.campaign.runner.run_campaign`.  The session's
+        ``cache_path`` backs the run unless overridden here."""
+        from .campaign.runner import run_campaign
+        from .campaign.spec import CampaignSpec
+        provided = frozenset(workloads or ())
+        if isinstance(spec, str):
+            spec = CampaignSpec.from_json(spec, session=self,
+                                          provided=provided)
+        elif isinstance(spec, dict):
+            spec = CampaignSpec.from_dict(spec, session=self,
+                                          provided=provided)
+        return run_campaign(
+            spec, workloads=workloads, out_dir=out_dir, executor=executor,
+            max_workers=max_workers,
+            cache_path=cache_path or self.cache_path,
+            schedule=schedule, progress=progress, session=self)
+
+    # ----------------------------- listing -----------------------------
+
+    def describe(self) -> dict:
+        """The live vocabularies, JSON-ready — what ``python -m
+        repro.campaign list`` prints: estimator kinds, topology kinds,
+        and catalog systems with their source files."""
+        return {
+            "estimators": list(self.estimators.kinds()),
+            "topologies": list(self.topologies.kinds()),
+            "systems": [
+                {"id": sid, "name": self.systems.get(sid).name,
+                 "source": _short_source(self.systems.source(sid))}
+                for sid in self.systems.names()],
+        }
+
+
+def _short_source(path: str) -> str:
+    """Catalog sources relative to CWD when possible (display only)."""
+    if not os.path.isabs(path):
+        return path
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:
+        return path
+    return rel if not rel.startswith("..") else os.path.normpath(path)
+
+
+def load_spec(path: str):
+    """Load + validate one campaign spec JSON (facade convenience)."""
+    from .campaign.spec import CampaignSpec
+    return CampaignSpec.from_json(path)

@@ -1,4 +1,4 @@
-"""CLI entry point: ``python -m repro.campaign [run|validate|report]``.
+"""CLI entry point: ``python -m repro.campaign [run|validate|report|list]``.
 
 A spec file is either one campaign — the JSON form of
 :class:`~repro.campaign.spec.CampaignSpec` (see ``docs/campaign.md`` for
@@ -15,6 +15,15 @@ single-command full-paper reproduction.
 ``validate`` checks every spec (grid axes, zip groups, workload sources,
 mesh shapes) and prints the expanded grid size without running anything —
 CI runs it on the checked-in ``specs/*.json``.
+
+``list`` prints the live extension vocabularies — registered estimator
+kinds, topology kinds, and the system catalog with each entry's source
+file — so the open vocabularies stay discoverable; ``--check``
+additionally validates every catalog record against the schema (CI runs
+``list --check`` over the shipped ``specs/systems/`` in the docs job).
+``--systems PATH`` (file or directory of system JSON records, repeatable,
+all subcommands) overlays user catalogs; campaign specs can do the same
+with a ``system_catalog`` field.
 
 ``report`` turns campaign results into the paper's evaluation artifacts
 (MAPE vs recorded references, Kendall-τ/Spearman rank preservation,
@@ -51,32 +60,34 @@ import json
 import os
 import sys
 
-# only spec.py (pure stdlib) at module load: `validate` must work in an
-# environment without jax/numpy installed (the CI docs job); the runner
-# and its estimator imports load lazily in the `run` branch
+# only spec.py + the api facade (pure stdlib) at module load: `validate`
+# and `list` must work in an environment without jax/numpy installed
+# (the CI docs job); the runner and its estimator imports load lazily in
+# the `run` branch
 from .spec import CampaignSpec
 
 
-def load_specs(path: str) -> list[tuple[str, CampaignSpec]]:
+def load_specs(path: str,
+               session=None) -> list[tuple[str, CampaignSpec]]:
     """Load a spec file into ``[(campaign_name, CampaignSpec), ...]``.
 
     A plain campaign yields one entry; a suite file yields one per
     sub-campaign (path entries resolved relative to the suite file).
+    ``session`` scopes spec validation to its registries/catalogs.
     """
     with open(path) as f:
         raw = json.load(f)
     if "suite" not in raw:
-        spec = CampaignSpec.from_dict(raw)
+        spec = CampaignSpec.from_file_dict(raw, path, session=session)
         return [(spec.name, spec)]
     base = os.path.dirname(os.path.abspath(path))
     out: list[tuple[str, CampaignSpec]] = []
     for entry in raw["suite"]:
         if isinstance(entry, str):
             sub = os.path.join(base, entry)
-            with open(sub) as f:
-                spec = CampaignSpec.from_dict(json.load(f))
+            spec = CampaignSpec.from_json(sub, session=session)
         else:
-            spec = CampaignSpec.from_dict(entry)
+            spec = CampaignSpec.from_dict(entry, session=session)
         if any(spec.name == n for n, _ in out):
             # names key per-campaign output dirs — a duplicate would
             # silently clobber the earlier campaign's results
@@ -144,7 +155,7 @@ def _load_results_jsonl(path: str) -> list[dict]:
     return rows
 
 
-def _report_command(args) -> int:
+def _report_command(args, session=None) -> int:
     """The ``report`` subcommand: build evaluation reports (and golden
     checks/updates) for every campaign named by the spec arguments."""
     from .report import (DEFAULT_TOLERANCE, build_report, check_rows,
@@ -154,7 +165,7 @@ def _report_command(args) -> int:
 
     entries = []  # (spec_file_path, campaign_name, CampaignSpec)
     for path in args.spec:
-        for name, spec in load_specs(path):
+        for name, spec in load_specs(path, session=session):
             if any(name == n for _, n, _ in entries):
                 raise ValueError(
                     f"report: duplicate campaign name {name!r} across "
@@ -179,7 +190,7 @@ def _report_command(args) -> int:
             result = run_campaign(
                 spec, out_dir=out_dir, executor=args.executor,
                 max_workers=args.jobs, cache_path=args.cache,
-                progress=not args.quiet)
+                progress=not args.quiet, session=session)
             rows = result.rows
 
         reference = load_json(reference_path(path, name))
@@ -246,18 +257,73 @@ def _report_command(args) -> int:
     return 1 if failures or num_failed else 0
 
 
+def _list_command(args) -> int:
+    """The ``list`` subcommand: print (and with ``--check`` validate)
+    the live extension vocabularies."""
+    from .. import api
+    from ..core.catalog import validate_system_dict
+
+    failures: list[str] = []
+    try:
+        session = api.Session(systems=args.systems or ())
+    except (OSError, ValueError, TypeError) as e:
+        print(f"INVALID catalog: {e}")
+        return 1
+    info = session.describe()
+    print("estimator kinds: " + ", ".join(info["estimators"]))
+    print("topology kinds:  " + ", ".join(info["topologies"]))
+    print(f"systems ({len(info['systems'])} catalog entries + 'host'):")
+    width = max((len(s["id"]) for s in info["systems"]), default=0)
+    for s in info["systems"]:
+        print(f"  {s['id']:<{width}}  {s['name']:<18} {s['source']}")
+    if args.check:
+        # re-validate every catalog *file* against the schema, with
+        # per-file errors: the shipped specs/systems/ dir plus any
+        # --systems paths (CI's docs job runs this)
+        from ..core.catalog import _DEFAULT_DIR
+        files: list[str] = []
+        for p in [_DEFAULT_DIR, *(args.systems or [])]:
+            if os.path.isdir(p):
+                files += [os.path.join(p, n) for n in sorted(os.listdir(p))
+                          if n.endswith(".json")]
+            elif os.path.exists(p):
+                files.append(p)
+        for path in files:
+            try:
+                with open(path) as f:
+                    validate_system_dict(json.load(f), source=path)
+            except (ValueError, json.JSONDecodeError) as e:
+                failures.append(str(e))
+        for f in failures:
+            print(f"INVALID {f}")
+        print(f"catalog check: {len(files)} file(s), "
+              f"{len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
 def main(argv: list[str] | None = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     command = "run"
-    if argv and argv[0] in ("run", "validate", "report"):
+    if argv and argv[0] in ("run", "validate", "report", "list"):
         command = argv.pop(0)
 
     ap = argparse.ArgumentParser(
         prog="python -m repro.campaign",
-        description="Run, validate, or report on a prediction campaign "
-                    "from a JSON grid spec (single campaign or suite).")
-    ap.add_argument("spec", nargs="+" if command != "run" else None,
-                    help="path to the campaign/suite spec (JSON)")
+        description="Run, validate, report on a prediction campaign "
+                    "from a JSON grid spec (single campaign or suite), "
+                    "or list the registered backends/system catalog.")
+    if command != "list":
+        ap.add_argument("spec", nargs="+" if command != "run" else None,
+                        help="path to the campaign/suite spec (JSON)")
+    ap.add_argument("--systems", action="append", default=[],
+                    metavar="PATH",
+                    help="extra system-catalog file or directory of JSON "
+                         "records (repeatable); ids become usable on the "
+                         "spec 'systems' axis")
+    if command == "list":
+        ap.add_argument("--check", action="store_true",
+                        help="validate every catalog record against the "
+                             "schema; exit nonzero on failures")
     if command in ("run", "report"):
         ap.add_argument("--executor", default="thread",
                         choices=("serial", "thread", "process"),
@@ -307,16 +373,28 @@ def main(argv: list[str] | None = None) -> int:
                              "--update-golden)")
     args = ap.parse_args(argv)
 
+    if command == "list":
+        return _list_command(args)
+
+    # every other subcommand resolves kinds/systems through one session
+    # (the stable repro.api facade) so user catalogs apply uniformly
+    from .. import api
+    try:
+        session = api.Session(systems=args.systems or ())
+    except (OSError, ValueError, TypeError) as e:
+        print(f"INVALID catalog: {type(e).__name__}: {e}")
+        return 1
+
     if command == "report":
-        return _report_command(args)
+        return _report_command(args, session=session)
 
     if command == "validate":
         bad = 0
         for path in args.spec:
             try:
-                specs = load_specs(path)
+                specs = load_specs(path, session=session)
                 for name, spec in specs:
-                    spec.validate()
+                    spec.validate(session=session)
                     _print_grid(name, spec)
             except (OSError, ValueError, KeyError, TypeError,
                     json.JSONDecodeError) as e:
@@ -329,7 +407,7 @@ def main(argv: list[str] | None = None) -> int:
     from .runner import run_campaign
     from .summary import format_table
 
-    specs = load_specs(args.spec)
+    specs = load_specs(args.spec, session=session)
     _preset_device_count(specs)
     multi = len(specs) > 1
     failed = 0
@@ -346,7 +424,8 @@ def main(argv: list[str] | None = None) -> int:
         result = run_campaign(
             spec, out_dir=out_dir, executor=args.executor,
             max_workers=args.jobs, cache_path=args.cache,
-            schedule=args.schedule, progress=not args.quiet)
+            schedule=args.schedule, progress=not args.quiet,
+            session=session)
         print(format_table(result.summary))
         if result.csv_path:
             print(f"  wrote {result.jsonl_path}, {result.csv_path}, "

@@ -3,80 +3,53 @@
 Everything here turns a primitives-only spec into live pipeline objects,
 which is what lets :class:`~repro.campaign.spec.JobSpec` records cross a
 process boundary: the worker rebuilds the objects locally from the spec.
+
+Estimator and topology kinds resolve through the open registries
+(:mod:`repro.core.registry`): each backend class carries a
+``from_spec(options, system, context)`` constructor, so adding a kind is
+one decorated class — no edits here.  Systems resolve through the
+catalog (:mod:`repro.core.catalog`).  Callers with session-scoped
+backends pass their registries; the defaults are the globals.
 """
 from __future__ import annotations
 
-from ..core.estimators import (MixedEstimator, ProfilingEstimator,
-                               RooflineEstimator, SystolicEstimator)
+from ..core.catalog import SystemRegistry, default_registry
 from ..core.estimators.base import ComputeEstimator
-from ..core.network import AllToAllNode, Dragonfly, MultiPod, Topology, Torus
-from ..core.pipeline import Workload, export_workload
-from ..core.systems import System, get_system
 from ..core.ir.graph import Program
-from .spec import (ESTIMATOR_KINDS, TOPOLOGY_KINDS, EstimatorSpec,
-                   TopologySpec, WorkloadSpec)
+from ..core.network import Topology
+from ..core.pipeline import Workload, export_workload
+from ..core.registry import ESTIMATORS, TOPOLOGIES, BuildContext, Registry
+from ..core.systems import System
+from .spec import EstimatorSpec, TopologySpec, WorkloadSpec
 
 
 def build_estimator(spec: EstimatorSpec, system: System, *,
-                    system_name: str = "", program: Program | None = None
-                    ) -> ComputeEstimator:
-    opts = spec.options_dict
-    if spec.kind == "roofline":
-        return RooflineEstimator(
-            system, mode=opts.get("mode", "region"),
-            include_overheads=bool(opts.get("include_overheads", False)))
-    if spec.kind == "systolic":
-        return SystolicEstimator(system, opts.get("preset", "cocossim"))
-    if spec.kind == "mixed":
-        return MixedEstimator(
-            SystolicEstimator(system, opts.get("preset", "cocossim")),
-            RooflineEstimator(system))
-    if spec.kind == "profiling":
-        target = None if system_name == "host" else system
-        return ProfilingEstimator(program=program,
-                                  runs=int(opts.get("runs", 3)),
-                                  target_system=target)
-    raise ValueError(
-        f"unknown estimator kind {spec.kind!r}; have {ESTIMATOR_KINDS}")
+                    system_name: str = "", program: Program | None = None,
+                    registry: Registry | None = None,
+                    context: BuildContext | None = None) -> ComputeEstimator:
+    reg = registry or ESTIMATORS
+    if spec.kind not in reg:
+        raise ValueError(reg.unknown_message(spec.kind))
+    if context is None:
+        context = BuildContext(system_name=system_name, program=program,
+                               estimators=reg)
+    return reg.get(spec.kind).from_spec(spec.options_dict, system, context)
 
 
-def build_topology(spec: TopologySpec, system: System) -> Topology:
-    p = spec.params_dict
-    kind = spec.kind
-    if kind == "auto":
-        # derive the family from the system's interconnect record — the
-        # cross-architecture axis: one grid, per-system native fabric.
-        # Only num_devices/link_bw come from the system so the numbers
-        # match a hand-built AllToAllNode/Torus with class defaults.
-        ic = system.interconnect
-        n = int(p.get("num_devices", 4))
-        if ic.kind in ("torus2d", "torus3d"):
-            dims = tuple(ic.params.get("dims", (2, 2)))
-            return Torus(dims=dims, link_bw=ic.link_bw)
-        return AllToAllNode(num_devices=n, link_bw=ic.link_bw)
-    if kind == "a2a":
-        return AllToAllNode(**p)
-    if kind == "dragonfly":
-        return Dragonfly(**p)
-    if kind == "torus":
-        if "dims" in p:
-            p = dict(p, dims=tuple(p["dims"]))
-        return Torus(**p)
-    if kind == "multipod":
-        p = dict(p)
-        pod = p.pop("pod", None)
-        if pod is not None:
-            pod = dict(pod)
-            if "dims" in pod:
-                pod["dims"] = tuple(pod["dims"])
-            p["pod"] = Torus(**pod)
-        return MultiPod(**p)
-    raise ValueError(
-        f"unknown topology kind {kind!r}; have {TOPOLOGY_KINDS}")
+def build_topology(spec: TopologySpec, system: System, *,
+                   registry: Registry | None = None,
+                   context: BuildContext | None = None) -> Topology:
+    reg = registry or TOPOLOGIES
+    if spec.kind not in reg:
+        raise ValueError(reg.unknown_message(spec.kind))
+    if context is None:
+        context = BuildContext(topologies=reg)
+    return reg.get(spec.kind).from_spec(spec.params_dict, system, context)
 
 
-def build_system(name: str) -> System:
-    return get_system(name)
+def build_system(name: str,
+                 registry: SystemRegistry | None = None) -> System:
+    return (registry or default_registry()).get(name)
 
 
 def build_workload(spec: WorkloadSpec) -> Workload:

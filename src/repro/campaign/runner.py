@@ -48,8 +48,10 @@ from concurrent.futures import (FIRST_COMPLETED, Executor,
                                 wait)
 from dataclasses import dataclass, field
 
+from ..core.catalog import SystemRegistry, default_registry
 from ..core.estimators.cache import PersistentCache
 from ..core.pipeline import PredictionJob, PredictionPlan, Workload
+from ..core.registry import ESTIMATORS, TOPOLOGIES, BuildContext
 from .builders import (build_estimator, build_system, build_topology,
                        build_workload)
 from .plans import PlanStore
@@ -62,14 +64,77 @@ SCHEDULES = ("locality", "grid")
 # -------------------------- single-job execution --------------------------
 
 
-def _execute(job: JobSpec, plan: PredictionPlan, store) -> tuple[dict, dict]:
+@dataclass
+class _Registries:
+    """The registry set one campaign's jobs build against — a session's
+    scoped registries (plugin kinds, user catalogs) or the globals —
+    plus the spec file's base dir for backend-relative paths."""
+    estimators: object = None           # core.registry.Registry
+    topologies: object = None
+    systems: SystemRegistry | None = None
+    base_dir: str | None = None
+
+    @classmethod
+    def for_session(cls, session, spec: CampaignSpec) -> "_Registries":
+        return cls(
+            estimators=getattr(session, "estimators", None),
+            topologies=getattr(session, "topologies", None),
+            systems=spec.system_registry(getattr(session, "systems", None)),
+            base_dir=spec.base_dir)
+
+    def local_entries(self) -> tuple[dict, dict, dict, str | None]:
+        """The non-global registrations, as picklable maps — what ships
+        to process-pool workers so they can rebuild the same scope.
+        (Classes pickle by reference: a plugin class must be importable
+        from the worker, i.e. defined at module level.)"""
+        est = self.estimators.local_entries() if self.estimators else {}
+        topo = self.topologies.local_entries() if self.topologies else {}
+        sysd: dict = {}
+        chain = []
+        reg = self.systems
+        while reg is not None and reg is not default_registry():
+            chain.append(reg)
+            reg = reg.parent
+        for r in reversed(chain):       # outermost scope wins
+            sysd.update(r.local_systems())
+        return est, topo, sysd, self.base_dir
+
+    @classmethod
+    def from_local_entries(cls, est: dict, topo: dict, sysd: dict,
+                           base_dir: str | None = None) -> "_Registries":
+        """Rebuild a worker-side scope from shipped maps."""
+        regs = cls(estimators=ESTIMATORS.scope(),
+                   topologies=TOPOLOGIES.scope(),
+                   systems=default_registry().scope(),
+                   base_dir=base_dir)
+        for kind, c in est.items():
+            regs.estimators.register(kind, c, replace=True)
+        for kind, c in topo.items():
+            regs.topologies.register(kind, c, replace=True)
+        for sid, s in sysd.items():
+            regs.systems.register(sid, s, source="<session>", replace=True)
+        return regs
+
+    def context(self, *, system_name: str = "",
+                program=None) -> "BuildContext":
+        return BuildContext(
+            system_name=system_name, program=program,
+            estimators=self.estimators, topologies=self.topologies,
+            systems=self.systems, base_dir=self.base_dir)
+
+
+def _execute(job: JobSpec, plan: PredictionPlan, store,
+             regs: _Registries | None = None) -> tuple[dict, dict]:
     """Evaluate one grid point against its shared plan; returns
     (result_row, freshly_computed_entries)."""
     t0 = time.perf_counter()
-    system = build_system(job.system)
+    regs = regs or _Registries()
+    system = build_system(job.system, registry=regs.systems)
+    ctx = regs.context(system_name=job.system, program=plan.program)
     estimator = build_estimator(job.estimator, system,
-                                system_name=job.system, program=plan.program)
-    topology = build_topology(job.topology, system)
+                                registry=regs.estimators, context=ctx)
+    topology = build_topology(job.topology, system,
+                              registry=regs.topologies, context=ctx)
     pjob = PredictionJob(
         estimator=estimator, topology=topology,
         slicer=job.slicer, overlap=job.overlap,
@@ -93,15 +158,20 @@ _WORKER: dict = {}
 
 
 def _worker_init(plan_paths: dict, cache_entries: dict,
-                 cache_path: str | None = None) -> None:
+                 cache_path: str | None = None,
+                 local_regs: tuple | None = None) -> None:
     """Per-worker setup.  ``plan_paths`` maps plan key -> pickled plan
     file; a worker unpickles a plan the first time one of its jobs
     references it (and never re-parses IR text).  With a ``cache_path``
     the worker opens the shared file-locked store — live view,
     write-through appends; without one it degrades to a private snapshot
-    of the parent's entries."""
+    of the parent's entries.  ``local_regs`` carries a session's scoped
+    registrations (plugin classes by reference, systems by value) so the
+    worker resolves the same open vocabularies as the parent."""
     _WORKER["plan_paths"] = dict(plan_paths)
     _WORKER["plans"] = {}
+    _WORKER["regs"] = (_Registries.from_local_entries(*local_regs)
+                       if local_regs else _Registries())
     if cache_path:
         _WORKER["store"] = PersistentCache(cache_path)
     else:
@@ -129,7 +199,8 @@ def _worker_run(job: JobSpec, plan_key: tuple,
         else:
             store.update({k: v[0] if isinstance(v, (tuple, list)) else v
                           for k, v in warm_entries.items()})
-    return _execute(job, _worker_plan(tuple(plan_key)), store)
+    return _execute(job, _worker_plan(tuple(plan_key)), store,
+                    _WORKER["regs"])
 
 
 # ------------------------------ the campaign ------------------------------
@@ -228,7 +299,8 @@ def run_campaign(spec: CampaignSpec, *,
                  max_workers: int | None = None,
                  cache_path: str | None = None,
                  schedule: str = "locality",
-                 progress: bool = False) -> CampaignResult:
+                 progress: bool = False,
+                 session=None) -> CampaignResult:
     """Expand ``spec`` into jobs, plan, run them, and collect/stream
     results.
 
@@ -241,13 +313,17 @@ def run_campaign(spec: CampaignSpec, *,
     every live worker — at one shared append-log (H, C, R) store; the
     log is compacted once on completion and the returned ``cache``
     report includes the across-run ``time_saving_fraction`` from
-    persisted per-key costs."""
+    persisted per-key costs.  ``session`` (a :class:`repro.api.Session`)
+    supplies scoped registries — plugin estimator/topology kinds and
+    user system catalogs — that jobs build against; without one the
+    global registries and the spec's own ``system_catalog`` apply."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule {schedule!r} not in {SCHEDULES}")
     t0 = time.perf_counter()
-    spec.validate(provided=set(workloads or {}))
+    spec.validate(provided=set(workloads or {}), session=session)
+    regs = _Registries.for_session(session, spec)
     jobs = spec.expand()
     texts = _workload_texts(spec, workloads)
 
@@ -295,11 +371,11 @@ def run_campaign(spec: CampaignSpec, *,
         if executor == "process":
             prows, new_entry_count = _run_process_pool(
                 chains, plan_keys, plans, cache, max_workers, emit_row,
-                out_dir)
+                out_dir, regs)
         else:
             prows, new_entry_count = _run_in_process(
                 chains, plan_keys, plans, cache, emit_row,
-                max_workers if executor == "thread" else 0)
+                max_workers if executor == "thread" else 0, regs)
         rows.extend(prows)
     finally:
         if jsonl_file:
@@ -365,7 +441,9 @@ def run_campaign(spec: CampaignSpec, *,
 
 def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
                     plans: PlanStore, cache: PersistentCache,
-                    emit_row, thread_workers: int) -> tuple[list[dict], int]:
+                    emit_row, thread_workers: int,
+                    regs: _Registries | None = None
+                    ) -> tuple[list[dict], int]:
     """Serial or thread-pool execution over one shared live cache store.
 
     Thread mode submits each chain's leader first and releases the
@@ -378,7 +456,7 @@ def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
     def run_one(job: JobSpec) -> None:
         try:
             plan = plans.get(*plan_keys[job.job_id])
-            row, new = _execute(job, plan, cache)
+            row, new = _execute(job, plan, cache, regs)
             with rows_lock:
                 new_keys.update(new)
         except Exception as e:  # noqa: BLE001 — keep the campaign going
@@ -421,7 +499,9 @@ def _drain_chains(pool: Executor, chains: list[list[JobSpec]],
 def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
                       plans: PlanStore, cache: PersistentCache,
                       max_workers: int | None, emit_row,
-                      out_dir: str | None) -> tuple[list[dict], int]:
+                      out_dir: str | None,
+                      regs: _Registries | None = None
+                      ) -> tuple[list[dict], int]:
     """Process-pool execution over pickled plan files.
 
     Workers never see workload text: the parent dumps each built plan to
@@ -454,9 +534,12 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
                 else tempfile.mkdtemp(prefix="repro-plans-"))
     try:
         plan_paths = plans.dump(plan_dir)
+        local_regs = (regs or _Registries()).local_entries()
+        if not any(local_regs):
+            local_regs = None     # nothing scoped: workers use globals
         with ProcessPoolExecutor(
                 max_workers=max_workers, initializer=_worker_init,
-                initargs=(plan_paths, snapshot, cache.path),
+                initargs=(plan_paths, snapshot, cache.path, local_regs),
                 mp_context=multiprocessing.get_context(method)) as pool:
 
             def submit(job: JobSpec, lead_entries):

@@ -12,13 +12,28 @@ from __future__ import annotations
 
 import itertools
 import json
+import os
 from dataclasses import asdict, dataclass, field
 
-#: closed axis vocabularies — the single source of truth (builders
-#: dispatches on these); kept here so ``validate`` needs no heavy imports
-ESTIMATOR_KINDS = ("roofline", "systolic", "mixed", "profiling")
-TOPOLOGY_KINDS = ("auto", "a2a", "dragonfly", "torus", "multipod")
+# the estimator/topology vocabularies are OPEN: the registries are the
+# single source of truth (builders resolves through the same objects, so
+# validation and execution cannot disagree), and membership checks never
+# import a backend module — ``validate`` stays usable without numpy/jax
+from ..core.catalog import SystemRegistry, default_registry
+from ..core.registry import ESTIMATORS, TOPOLOGIES
+
 SLICER_NAMES = ("linear", "dep", "dependency-aware")
+
+
+def __getattr__(name: str):
+    """Back-compat: the historical closed-vocabulary tuples now reflect
+    the live registries (``from repro.campaign.spec import
+    ESTIMATOR_KINDS`` keeps working and includes plugin kinds)."""
+    if name == "ESTIMATOR_KINDS":
+        return ESTIMATORS.kinds()
+    if name == "TOPOLOGY_KINDS":
+        return TOPOLOGIES.kinds()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 #: the grid axes, in canonical (expansion) order — ``zip`` groups may
 #: only name these, and expansion enumerates them in exactly this order
@@ -255,11 +270,26 @@ class CampaignSpec:
     straggler_factor: list[float] = field(default_factory=lambda: [1.0])
     compression: list[float] = field(default_factory=lambda: [1.0])
     zip_axes: list[tuple] = field(default_factory=list)  # JSON key: "zip"
+    #: extra system-catalog files/dirs (JSON records, see docs/extending.md)
+    #: whose ids the ``systems`` axis may then use; relative paths resolve
+    #: against the spec file when loaded via :meth:`from_json`
+    system_catalog: list[str] = field(default_factory=list)
+
+    #: the spec file's directory when loaded via :meth:`from_json` (a
+    #: plain class attribute — unannotated, so *not* a dataclass field or
+    #: spec key) — backends resolve their own relative paths (e.g. a
+    #: ``table`` estimator's profile JSON) against it via
+    #: ``BuildContext.base_dir``
+    base_dir = None
 
     @classmethod
-    def from_dict(cls, d: dict) -> "CampaignSpec":
+    def from_dict(cls, d: dict, *, session=None,
+                  provided: set[str] | frozenset = frozenset()
+                  ) -> "CampaignSpec":
         """Build and validate from the JSON dict form; unknown keys are
-        rejected so spec typos fail fast."""
+        rejected so spec typos fail fast.  ``session`` scopes validation
+        to a :class:`repro.api.Session`'s registries; ``provided`` names
+        workloads supplied in-memory (no spec source required)."""
         d = dict(d)
         zip_groups = d.pop("zip", [])
         known = {f for f in cls.__dataclass_fields__} - {"zip_axes"}
@@ -281,15 +311,39 @@ class CampaignSpec:
                               for s in d.get("straggler_factor", [1.0])],
             compression=[float(c) for c in d.get("compression", [1.0])],
             zip_axes=[tuple(g) for g in zip_groups],
+            system_catalog=[str(p) for p in d.get("system_catalog", [])],
         )
-        spec.validate()
+        spec.validate(provided, session=session)
         return spec
 
     @classmethod
-    def from_json(cls, path: str) -> "CampaignSpec":
-        """Load and validate a spec file (see ``docs/campaign.md``)."""
+    def from_file_dict(cls, d: dict, path: str, *, session=None,
+                       provided: set[str] | frozenset = frozenset()
+                       ) -> "CampaignSpec":
+        """:meth:`from_dict` for a dict that came from a spec *file*:
+        relative ``system_catalog`` paths resolve against the file and
+        the spec remembers its ``base_dir`` (callers that already parsed
+        the JSON — e.g. suite loading — use this to avoid re-reading)."""
+        d = dict(d)
+        base = os.path.dirname(os.path.abspath(path))
+        if d.get("system_catalog"):
+            d["system_catalog"] = [
+                p if os.path.isabs(p) else os.path.join(base, p)
+                for p in d["system_catalog"]]
+        spec = cls.from_dict(d, session=session, provided=provided)
+        spec.base_dir = base
+        return spec
+
+    @classmethod
+    def from_json(cls, path: str, *, session=None,
+                  provided: set[str] | frozenset = frozenset()
+                  ) -> "CampaignSpec":
+        """Load and validate a spec file (see ``docs/campaign.md``);
+        relative ``system_catalog`` paths resolve against the file."""
         with open(path) as f:
-            return cls.from_dict(json.load(f))
+            d = json.load(f)
+        return cls.from_file_dict(d, path, session=session,
+                                  provided=provided)
 
     def to_dict(self) -> dict:
         """JSON-ready dict form; round-trips through :meth:`from_dict`."""
@@ -301,17 +355,50 @@ class CampaignSpec:
         zip_groups = d.pop("zip_axes")
         if zip_groups:
             d["zip"] = [list(g) for g in zip_groups]
+        if not d.get("system_catalog"):
+            d.pop("system_catalog", None)
         return d
 
-    def validate(self, provided: set[str] | frozenset = frozenset()) -> None:
+    def system_registry(self,
+                        base: SystemRegistry | None = None
+                        ) -> SystemRegistry:
+        """The catalog this spec's ``systems`` axis resolves against:
+        ``base`` (a session's registry, default the shipped catalog)
+        overlaid with the spec's own ``system_catalog`` files.
+
+        The catalog files are read from disk once per spec instance (the
+        campaign path calls this at load-validate, run-validate, and job
+        build); only the cheap scope assembly repeats."""
+        base = base if base is not None else default_registry()
+        if not self.system_catalog:
+            return base
+        records = getattr(self, "_catalog_records", None)
+        if records is None:
+            probe = SystemRegistry(self.system_catalog)
+            records = [(sid, probe.get(sid), probe.source(sid))
+                       for sid in probe.names()]
+            self._catalog_records = records
+        scope = base.scope()
+        for sid, system, source in records:
+            scope.register(sid, system, source=source, replace=True)
+        return scope
+
+    def validate(self, provided: set[str] | frozenset = frozenset(), *,
+                 session=None) -> None:
         """Reject grids that could not run: empty axes, sourceless
-        workloads, and axis values outside the closed vocabularies
-        (estimator/topology kinds, slicer names, system ids) — so
-        ``python -m repro.campaign validate`` catches typos that would
-        otherwise only surface as all-error rows at run time.
+        workloads, and axis values outside the live vocabularies
+        (registered estimator/topology kinds, slicer names, catalog
+        system ids) — so ``python -m repro.campaign validate`` catches
+        typos that would otherwise only surface as all-error rows at run
+        time.  Unknown kinds report the registry's did-you-mean.
 
         ``provided``: workload names supplied in-memory to the runner —
-        those need no on-disk/arch source in the spec."""
+        those need no on-disk/arch source in the spec.  ``session``: a
+        :class:`repro.api.Session` whose scoped registries (plugin kinds,
+        user catalogs) this spec should validate against."""
+        estimators = getattr(session, "estimators", None) or ESTIMATORS
+        topologies = getattr(session, "topologies", None) or TOPOLOGIES
+        systems = self.system_registry(getattr(session, "systems", None))
         if not self.workloads:
             raise ValueError("campaign spec: at least one workload required")
         for w in self.workloads:
@@ -323,27 +410,22 @@ class CampaignSpec:
                 raise ValueError(f"campaign spec: axis {axis!r} is empty")
         self._validate_zip()
         for e in self.estimators:
-            if e.kind not in ESTIMATOR_KINDS:
+            if e.kind not in estimators:
                 raise ValueError(
-                    f"campaign spec: unknown estimator kind {e.kind!r}; "
-                    f"have {ESTIMATOR_KINDS}")
+                    f"campaign spec: {estimators.unknown_message(e.kind)}")
         for t in self.topologies:
-            if t.kind not in TOPOLOGY_KINDS:
+            if t.kind not in topologies:
                 raise ValueError(
-                    f"campaign spec: unknown topology kind {t.kind!r}; "
-                    f"have {TOPOLOGY_KINDS}")
+                    f"campaign spec: {topologies.unknown_message(t.kind)}")
         for s in self.slicers:
             if s not in SLICER_NAMES:
                 raise ValueError(
                     f"campaign spec: unknown slicer {s!r}; "
                     f"have {SLICER_NAMES}")
-        # stdlib-only import: the system table carries no numpy/jax
-        from ..core.systems import SYSTEMS
         for name in self.systems:
-            if name != "host" and name.lower() not in SYSTEMS:
+            if name not in systems:
                 raise ValueError(
-                    f"campaign spec: unknown system {name!r}; "
-                    f"have {['host', *SYSTEMS]}")
+                    f"campaign spec: {systems.unknown_message(name)}")
 
     def _validate_zip(self) -> None:
         """Reject malformed zip groups: unknown axis names, axes claimed

@@ -3,9 +3,11 @@ from .base import ComputeEstimator, MixedEstimator
 from .cache import CachedEstimator, CacheStats
 from .profiling import ProfilingEstimator
 from .systolic import PRESETS, SystolicEstimator
+from .table import TableEstimator, load_profile, record_profile, save_profile
 
 __all__ = [
     "ComputeEstimator", "MixedEstimator", "RooflineEstimator",
     "CachedEstimator", "CacheStats", "ProfilingEstimator",
     "SystolicEstimator", "PRESETS",
+    "TableEstimator", "load_profile", "record_profile", "save_profile",
 ]

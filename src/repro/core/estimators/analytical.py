@@ -10,11 +10,13 @@ analytical path consistently optimistic relative to hardware.
 from __future__ import annotations
 
 from ..ir.opcost import op_cost
+from ..registry import register_estimator
 from ..slicing.regions import ComputeRegion
 from ..systems import System
 from .base import ComputeEstimator
 
 
+@register_estimator("roofline")
 class RooflineEstimator(ComputeEstimator):
     toolchain = "roofline"
 
@@ -26,6 +28,13 @@ class RooflineEstimator(ComputeEstimator):
         assert mode in ("region", "per-op")
         self.mode = mode
         self.include_overheads = include_overheads
+
+    @classmethod
+    def from_spec(cls, options: dict, system: System,
+                  context) -> "RooflineEstimator":
+        return cls(system, mode=options.get("mode", "region"),
+                   include_overheads=bool(
+                       options.get("include_overheads", False)))
 
     @property
     def cache_config_key(self) -> str:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import abc
 
+from ..registry import register_estimator
 from ..slicing.regions import ComputeRegion
 from ..systems import System
 
@@ -24,6 +25,15 @@ class ComputeEstimator(abc.ABC):
 
     def __init__(self, system: System):
         self.system = system
+
+    @classmethod
+    def from_spec(cls, options: dict, system: System,
+                  context) -> "ComputeEstimator":
+        """Build from a campaign-spec options dict (the registry builder
+        protocol — see :mod:`repro.core.registry`).  The default assumes
+        options map straight onto constructor keywords; backends with
+        richer wiring (sub-estimators, source programs) override this."""
+        return cls(system, **options)
 
     @abc.abstractmethod
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
@@ -71,6 +81,7 @@ class ComputeEstimator(abc.ABC):
         return ""
 
 
+@register_estimator("mixed")
 class MixedEstimator(ComputeEstimator):
     """Primary estimator + fallback for unsupported regions (paper §III-B(c))."""
 
@@ -79,6 +90,18 @@ class MixedEstimator(ComputeEstimator):
         self.primary = primary
         self.fallback = fallback
         self.toolchain = f"{primary.toolchain}+{fallback.toolchain}"
+
+    @classmethod
+    def from_spec(cls, options: dict, system: System,
+                  context) -> "MixedEstimator":
+        """Spec form: systolic primary + roofline fallback (the paper's
+        COCOSSim-plus-analytical pairing); ``preset`` configures the
+        primary."""
+        from .analytical import RooflineEstimator
+        from .systolic import SystolicEstimator
+        return cls(
+            SystolicEstimator(system, options.get("preset", "cocossim")),
+            RooflineEstimator(system))
 
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         if self.primary.supports(region):

@@ -21,6 +21,7 @@ import time
 import numpy as np
 
 from ..ir.graph import Program
+from ..registry import register_estimator
 from ..slicing.emit import RegionEmitError, region_to_module
 from ..slicing.regions import ComputeRegion
 from ..systems import System, host_system
@@ -53,6 +54,7 @@ def _synthetic(t) -> np.ndarray:
     return np.zeros(t.shape, np.float32)
 
 
+@register_estimator("profiling")
 class ProfilingEstimator(ComputeEstimator):
     toolchain = "xla-host"
 
@@ -69,6 +71,17 @@ class ProfilingEstimator(ComputeEstimator):
         self.fallback = RooflineEstimator(self.system, mode="per-op",
                                           include_overheads=True)
         self.emit_failures = 0
+
+    @classmethod
+    def from_spec(cls, options: dict, system: System,
+                  context) -> "ProfilingEstimator":
+        """Spec form: profile on the host, roofline-projecting onto the
+        grid system — unless the grid system *is* the host (ground-truth
+        mode, no projection)."""
+        target = None if context.system_name == "host" else system
+        return cls(program=context.program,
+                   runs=int(options.get("runs", 3)),
+                   target_system=target)
 
     # Compute API
     def get_compile_args(self) -> dict:

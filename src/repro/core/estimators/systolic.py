@@ -28,6 +28,7 @@ from dataclasses import dataclass
 
 from ..ir.graph import OpNode
 from ..ir.types import DTYPE_BYTES
+from ..registry import register_estimator
 from ..slicing.regions import ComputeRegion
 from ..systems import System
 from .base import ComputeEstimator
@@ -68,6 +69,7 @@ def _gemm_dims(op: OpNode) -> tuple[int, int, int, int] | None:
     return batch, m, n, k
 
 
+@register_estimator("systolic")
 class SystolicEstimator(ComputeEstimator):
     """Cycle-approximate MXU model behind the Compute API."""
 
@@ -75,6 +77,11 @@ class SystolicEstimator(ComputeEstimator):
         super().__init__(system)
         self.preset = PRESETS[preset]
         self.toolchain = f"systolic-{preset}"
+
+    @classmethod
+    def from_spec(cls, options: dict, system: System,
+                  context) -> "SystolicEstimator":
+        return cls(system, options.get("preset", "cocossim"))
 
     def supports(self, region: ComputeRegion) -> bool:
         """Native support: regions whose cost is ≥90% matmul flops."""

@@ -17,6 +17,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from ..registry import register_topology
+
 
 @dataclass(frozen=True)
 class PathProfile:
@@ -38,7 +40,17 @@ class Topology:
         p = self.ring(2)
         return p.latency + size_bytes / p.ring_bw
 
+    @classmethod
+    def from_spec(cls, params: dict, system, context) -> "Topology":
+        """Build from a campaign-spec params dict (the registry builder
+        protocol — see :mod:`repro.core.registry`).  The default maps
+        params straight onto constructor keywords, turning list-valued
+        params (JSON arrays, e.g. torus ``dims``) into tuples."""
+        return cls(**{k: (tuple(v) if isinstance(v, list) else v)
+                      for k, v in params.items()})
 
+
+@register_topology("a2a")
 @dataclass
 class AllToAllNode(Topology):
     """Fully connected NVLink node: every pair has a direct link."""
@@ -53,6 +65,7 @@ class AllToAllNode(Topology):
                            hops=max(g - 1, 1), bidirectional=True)
 
 
+@register_topology("dragonfly")
 @dataclass
 class Dragonfly(Topology):
     """Two-level system: NVLink all-to-all inside a node, dragonfly between
@@ -105,6 +118,7 @@ class Dragonfly(Topology):
         return levels
 
 
+@register_topology("torus")
 @dataclass
 class Torus(Topology):
     """TPU ICI torus.  dims=(16,16) is a v5e pod; wrap links double ring bw.
@@ -134,6 +148,7 @@ class Torus(Topology):
         return 2
 
 
+@register_topology("multipod")
 @dataclass
 class MultiPod(Topology):
     """Pods of ``pod_topology`` connected by a data-center network (DCN)."""
@@ -172,3 +187,44 @@ class MultiPod(Topology):
                 ring_bw=agg / chips_per_pod, latency=self.dcn_latency,
                 hops=pods)))
         return levels
+
+    @classmethod
+    def from_spec(cls, params: dict, system, context) -> "MultiPod":
+        """Spec form: the nested ``pod`` params dict builds the Torus."""
+        p = dict(params)
+        pod = p.pop("pod", None)
+        if pod is not None:
+            p["pod"] = Torus.from_spec(dict(pod), system, context)
+        return cls(**p)
+
+
+@register_topology("auto")
+class AutoTopology:
+    """Derive the topology family from the grid system's interconnect
+    record — the cross-architecture axis: one grid, per-system native
+    fabric (all-to-all node for GPUs, torus for TPUs).
+
+    Not a topology itself: ``from_spec`` *returns* the derived
+    :class:`AllToAllNode`/:class:`Torus`.  Only num_devices/link_bw come
+    from the system so the numbers match a hand-built topology with
+    class defaults."""
+
+    @classmethod
+    def from_spec(cls, params: dict, system, context) -> Topology:
+        ic = system.interconnect
+        n = int(params.get("num_devices", 4))
+        if ic.kind in ("torus2d", "torus3d"):
+            dims = tuple(ic.params.get("dims", (2, 2)))
+            if "num_devices" in params and n != math.prod(dims):
+                # a torus fabric is fixed by the system's dims; silently
+                # simulating a different device count than requested
+                # would corrupt the cross-architecture comparison
+                raise ValueError(
+                    f"topology 'auto' on system {system.name!r}: requested "
+                    f"num_devices={n} but the system's "
+                    f"{ic.kind} interconnect has dims={dims} "
+                    f"({math.prod(dims)} devices) — drop num_devices to "
+                    "use the system fabric, or use an explicit 'torus' "
+                    "topology with your own dims")
+            return Torus(dims=dims, link_bw=ic.link_bw)
+        return AllToAllNode(num_devices=n, link_bw=ic.link_bw)

@@ -1,0 +1,241 @@
+"""Open extension registries for estimator and topology kinds.
+
+The paper's central claim is that one StableHLO representation fans out
+to *many* performance models across *many* architectures — so the
+estimator and topology vocabularies must be open, not if/elif chains.
+A :class:`Registry` maps a kind name (the string a campaign spec uses)
+to a *backend class* carrying a ``from_spec(options, system, context)``
+classmethod; ``repro.campaign.builders`` materializes grid points by
+registry lookup and ``CampaignSpec.validate`` queries the same registry,
+so the validator and the runner can never disagree about what exists.
+
+Built-in kinds are registered *lazily*: the registry knows their names
+and home modules up front (so ``python -m repro.campaign validate`` can
+check a spec in an environment without numpy/jax), but only imports the
+module — whose ``@register_estimator`` / ``@register_topology``
+decorators then fire — when a class is actually requested.
+
+Third-party backends register through the same decorators::
+
+    from repro.api import register_estimator
+
+    @register_estimator("my-sim")
+    class MySimEstimator(ComputeEstimator):
+        @classmethod
+        def from_spec(cls, options, system, context):
+            return cls(system, **options)
+
+or, scoped to one :class:`repro.api.Session`, via
+``session.register_estimator("my-sim")`` — session registries overlay
+the global ones without mutating them.
+"""
+from __future__ import annotations
+
+import difflib
+import importlib
+from dataclasses import dataclass
+
+
+@dataclass
+class BuildContext:
+    """What a backend's ``from_spec`` may need beyond (options, system).
+
+    ``system_name`` is the campaign-spec system id (``"host"`` is how the
+    profiling estimator detects ground-truth mode); ``program`` is the
+    parsed source program when the caller has one (profiling re-emits
+    regions from it); the three registries let composite backends build
+    sub-backends through the same open vocabulary that built them.
+    """
+    system_name: str = ""
+    program: object | None = None
+    estimators: "Registry | None" = None
+    topologies: "Registry | None" = None
+    systems: object | None = None   # repro.core.catalog.SystemRegistry
+    base_dir: str | None = None     # spec file's directory, for relative paths
+
+    def resolve_path(self, path: str) -> str:
+        """Resolve a spec-relative path against the spec file's dir."""
+        import os
+        if self.base_dir and not os.path.isabs(path):
+            return os.path.join(self.base_dir, path)
+        return path
+
+
+class Registry:
+    """Name -> backend-class registry with lazy builtins and scoping.
+
+    * ``kinds()`` / ``in`` work without importing any backend module —
+      validation stays usable in minimal environments;
+    * ``get(kind)`` resolves lazily registered builtins by importing
+      their home module (the module's own decorator registers the class);
+    * ``scope()`` returns a child registry that falls back to this one
+      for lookups but keeps its own registrations local — the mechanism
+      behind per-:class:`repro.api.Session` backends;
+    * unknown kinds raise with the live vocabulary and a did-you-mean
+      suggestion derived from it.
+    """
+
+    def __init__(self, label: str, builtins: dict[str, str] | None = None,
+                 parent: "Registry | None" = None):
+        self.label = label
+        self.parent = parent
+        self._entries: dict[str, type] = {}
+        self._builtins: dict[str, str] = dict(builtins or {})
+
+    # ------------------------------ queries ------------------------------
+
+    def kinds(self) -> tuple[str, ...]:
+        """Every known kind name (registered + lazy builtins + parents),
+        builtins first in declaration order, then extensions by name."""
+        seen: dict[str, None] = {}
+        root: Registry | None = self
+        chain = []
+        while root is not None:
+            chain.append(root)
+            root = root.parent
+        for reg in reversed(chain):          # globals first, scopes after
+            for k in reg._builtins:
+                seen.setdefault(k)
+        extras = set()
+        for reg in chain:
+            extras.update(k for k in reg._entries if k not in seen)
+        for k in sorted(extras):
+            seen.setdefault(k)
+        return tuple(seen)
+
+    def __contains__(self, kind: str) -> bool:
+        return (kind in self._entries or kind in self._builtins
+                or (self.parent is not None and kind in self.parent))
+
+    def unknown_message(self, kind) -> str:
+        """The error text for an unknown kind: live vocabulary plus a
+        did-you-mean derived from it."""
+        have = self.kinds()
+        msg = f"unknown {self.label} kind {kind!r}; have {have}"
+        close = difflib.get_close_matches(str(kind), have, n=1)
+        if close:
+            msg += f" — did you mean {close[0]!r}?"
+        return msg
+
+    # ---------------------------- registration ----------------------------
+
+    def register(self, kind: str, obj: type | None = None, *,
+                 replace: bool = False):
+        """Register ``obj`` under ``kind``; usable as a decorator.
+
+        Duplicate kinds are an error unless ``replace=True`` — except the
+        self-registration a lazy builtin's home module performs when it
+        is first imported, which *fulfils* the pending entry."""
+        def _do(cls: type) -> type:
+            if not replace:
+                owner = self._builtin_owner(kind)
+                fulfils = (owner is not None
+                           and getattr(cls, "__module__", None) == owner)
+                if (kind in self._entries
+                        or (owner is not None and not fulfils)
+                        or (owner is None and self.parent is not None
+                            and kind in self.parent)):
+                    raise ValueError(
+                        f"{self.label} kind {kind!r} is already registered "
+                        f"(by {self._describe(kind)}); pass replace=True to "
+                        "override it")
+            if not callable(getattr(cls, "from_spec", None)):
+                raise TypeError(
+                    f"{self.label} backend for {kind!r} needs a "
+                    "from_spec(options, system, context) classmethod "
+                    f"(got {cls!r})")
+            self._entries[kind] = cls
+            return cls
+
+        return _do if obj is None else _do(obj)
+
+    def _builtin_owner(self, kind: str) -> str | None:
+        reg: Registry | None = self
+        while reg is not None:
+            if kind in reg._builtins:
+                return reg._builtins[kind]
+            reg = reg.parent
+        return None
+
+    def _describe(self, kind: str) -> str:
+        reg: Registry | None = self
+        while reg is not None:
+            if kind in reg._entries:
+                cls = reg._entries[kind]
+                return f"{cls.__module__}.{cls.__qualname__}"
+            if kind in reg._builtins:
+                return reg._builtins[kind]
+            reg = reg.parent
+        return "<unknown>"
+
+    # ------------------------------ lookups ------------------------------
+
+    def get(self, kind: str) -> type:
+        """The backend class for ``kind`` (resolving lazy builtins)."""
+        cls = self._entries.get(kind)
+        if cls is not None:
+            return cls
+        module = self._builtins.get(kind)
+        if module is not None:
+            importlib.import_module(module)
+            cls = self._entries.get(kind)
+            if cls is None:
+                raise ImportError(
+                    f"module {module!r} did not register {self.label} "
+                    f"kind {kind!r} on import")
+            return cls
+        if self.parent is not None and kind in self.parent:
+            return self.parent.get(kind)
+        raise ValueError(self.unknown_message(kind))
+
+    # ------------------------------ scoping ------------------------------
+
+    def scope(self) -> "Registry":
+        """A child registry: local registrations, parent fallback."""
+        return Registry(self.label, parent=self)
+
+    def local_entries(self) -> dict[str, type]:
+        """This registry's own (non-inherited) resolved entries — what a
+        session ships to process-pool campaign workers."""
+        return dict(self._entries)
+
+
+#: the global estimator vocabulary; builtin kinds resolve lazily from
+#: their home modules (each module self-registers via the decorator)
+ESTIMATORS = Registry("estimator", builtins={
+    "roofline": "repro.core.estimators.analytical",
+    "systolic": "repro.core.estimators.systolic",
+    "mixed": "repro.core.estimators.base",
+    "profiling": "repro.core.estimators.profiling",
+    "table": "repro.core.estimators.table",
+})
+
+#: the global topology vocabulary
+TOPOLOGIES = Registry("topology", builtins={
+    "auto": "repro.core.network.topology",
+    "a2a": "repro.core.network.topology",
+    "dragonfly": "repro.core.network.topology",
+    "torus": "repro.core.network.topology",
+    "multipod": "repro.core.network.topology",
+})
+
+
+def register_estimator(kind: str, cls: type | None = None, *,
+                       registry: Registry | None = None,
+                       replace: bool = False):
+    """Register an estimator backend class under ``kind`` (decorator).
+
+    The class must carry ``from_spec(options, system, context)``
+    returning a :class:`~repro.core.estimators.base.ComputeEstimator`.
+    Without ``registry`` the global vocabulary is extended."""
+    return (registry or ESTIMATORS).register(kind, cls, replace=replace)
+
+
+def register_topology(kind: str, cls: type | None = None, *,
+                      registry: Registry | None = None,
+                      replace: bool = False):
+    """Register a topology backend class under ``kind`` (decorator).
+
+    The class must carry ``from_spec(params, system, context)`` returning
+    a :class:`~repro.core.network.topology.Topology`."""
+    return (registry or TOPOLOGIES).register(kind, cls, replace=replace)

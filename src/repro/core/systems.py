@@ -3,11 +3,20 @@
 Every estimator and the network simulator read from these records, so a
 workload can be re-costed on a different system by swapping one object —
 the paper's cross-architecture axis.
+
+The records themselves are *data*, not code: the shipped catalog lives
+in ``specs/systems/*.json`` (one file per system) and loads through
+:class:`~repro.core.catalog.SystemRegistry`, which also accepts user
+catalogs (``--systems`` on the CLI, ``Session(systems=[...])`` in the
+API).  This module keeps the :class:`System`/:class:`Interconnect`
+dataclasses, the calibrated host-CPU system, and — as a back-compat
+shim — the historical module-level names (``A100`` … ``TPU_V5E``,
+``SYSTEMS``, ``get_system``), all of which now resolve from the catalog.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field, replace
+from dataclasses import asdict, dataclass, field
 
 
 @dataclass(frozen=True)
@@ -17,6 +26,24 @@ class Interconnect:
     link_latency: float = 1e-6
     links_per_device: int = 1
     params: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        """JSON-ready dict form (tuple params become lists)."""
+        d = asdict(self)
+        d["params"] = {k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in self.params.items()}
+        if not d["params"]:
+            del d["params"]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Interconnect":
+        """Inverse of :meth:`to_dict`; list params (e.g. torus ``dims``)
+        become tuples so round-trips compare equal."""
+        d = dict(d)
+        params = {k: (tuple(v) if isinstance(v, list) else v)
+                  for k, v in (d.pop("params", None) or {}).items()}
+        return cls(params=params, **d)
 
 
 @dataclass(frozen=True)
@@ -43,87 +70,26 @@ class System:
                 "f16", self.peak_flops["f32"]))
         return self.peak_flops.get("f32", max(self.peak_flops.values()))
 
+    def to_dict(self) -> dict:
+        """JSON-ready dict form — the catalog record format (minus the
+        catalog ``id``, which is the file stem / registration key)."""
+        d = asdict(self)
+        d["interconnect"] = self.interconnect.to_dict()
+        return d
 
-_T = 1e12
+    @classmethod
+    def from_dict(cls, d: dict) -> "System":
+        """Inverse of :meth:`to_dict`:
+        ``System.from_dict(s.to_dict()) == s`` for any system, including
+        after a JSON round-trip."""
+        d = dict(d)
+        d.pop("id", None)
+        d["interconnect"] = Interconnect.from_dict(d["interconnect"])
+        d["peak_flops"] = {k: float(v) for k, v in d["peak_flops"].items()}
+        return cls(**d)
+
+
 _G = 1e9
-
-# ---- paper Table IV: GPU systems (4-GPU all-to-all NVLink nodes) ----
-A100 = System(
-    name="A100-40GB-SXM",
-    peak_flops={"bf16": 312 * _T, "f16": 312 * _T, "f32": 19.5 * _T},
-    mem_bw=1.94e12, mem_capacity=40 * _G,
-    interconnect=Interconnect("all_to_all", link_bw=100 * _G),
-    mxu_rows=16, mxu_cols=16, n_mxu=432, clock_hz=1.41e9,
-    vmem_bytes=40 * 2**20, kernel_overhead_s=4e-6,
-)
-H100 = System(
-    name="H100-80GB-SXM",
-    peak_flops={"bf16": 1979 * _T / 2, "f16": 1979 * _T / 2,
-                "f32": 67 * _T, "f8e4m3fn": 1979 * _T},
-    mem_bw=3.35e12, mem_capacity=80 * _G,
-    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
-    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
-    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
-)
-# The paper's Table IV lists the sparse/marketing 1979 TFLOP/s for H100/H200;
-# we keep a separate "paper-faithful" variant used when reproducing its plots.
-H100_PAPER = replace(H100, name="H100-paper",
-                     peak_flops={"bf16": 1979 * _T, "f16": 1979 * _T,
-                                 "f32": 67 * _T})
-H200 = System(
-    name="H200-141GB-SXM",
-    peak_flops={"bf16": 1979 * _T / 2, "f16": 1979 * _T / 2, "f32": 67 * _T},
-    mem_bw=4.8e12, mem_capacity=141 * _G,
-    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
-    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
-    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
-)
-H200_PAPER = replace(H200, name="H200-paper",
-                     peak_flops={"bf16": 1979 * _T, "f16": 1979 * _T,
-                                 "f32": 67 * _T})
-B200 = System(
-    name="B200-180GB-HGX",
-    peak_flops={"bf16": 2250 * _T, "f16": 2250 * _T, "f32": 80 * _T},
-    mem_bw=7.7e12, mem_capacity=180 * _G,
-    interconnect=Interconnect("all_to_all", link_bw=300 * _G),
-    mxu_rows=16, mxu_cols=16, n_mxu=592, clock_hz=1.9e9,
-    vmem_bytes=60 * 2**20, kernel_overhead_s=3e-6,
-)
-B200_PAPER = replace(B200, name="B200-paper",
-                     peak_flops={"bf16": 4500 * _T, "f16": 4500 * _T,
-                                 "f32": 80 * _T})
-GH200 = System(  # paper §V-B scale-out node GPU
-    name="GH200",
-    peak_flops={"bf16": 990 * _T, "f16": 990 * _T, "f32": 67 * _T},
-    mem_bw=4.9e12, mem_capacity=96 * _G,
-    interconnect=Interconnect("all_to_all", link_bw=150 * _G),
-    mxu_rows=16, mxu_cols=16, n_mxu=528, clock_hz=1.83e9,
-    vmem_bytes=50 * 2**20, kernel_overhead_s=3e-6,
-)
-
-# ---- TPUs ----
-TPU_V3_CORE = System(  # paper Fig 5 (per-core, from xprof)
-    name="TPUv3-core",
-    peak_flops={"bf16": 61.4 * _T, "f32": 15.4 * _T},
-    mem_bw=450e9, mem_capacity=16 * _G,
-    interconnect=Interconnect("torus2d", link_bw=70 * _G,
-                              links_per_device=4,
-                              params={"dims": (4, 2)}),
-    mxu_rows=128, mxu_cols=128, n_mxu=2, clock_hz=940e6,
-    vmem_bytes=16 * 2**20, kernel_overhead_s=2e-6,
-)
-# Roofline-target chip for this repo's dry-run mesh (constants mandated by
-# the deliverable: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
-TPU_V5E = System(
-    name="TPUv5e",
-    peak_flops={"bf16": 197 * _T, "f32": 49 * _T, "s8": 394 * _T},
-    mem_bw=819e9, mem_capacity=16 * _G,
-    interconnect=Interconnect("torus2d", link_bw=50 * _G,
-                              links_per_device=4,
-                              params={"dims": (16, 16)}),
-    mxu_rows=128, mxu_cols=128, n_mxu=4, clock_hz=1.74e9,
-    vmem_bytes=128 * 2**20, kernel_overhead_s=1e-6,
-)
 
 # ---- host CPU (ground-truth platform for profiling validation) ----
 _HOST_CACHE: dict[str, float] = {}
@@ -165,15 +131,37 @@ def host_system(calibrate: bool = True) -> System:
     )
 
 
-SYSTEMS = {
-    "a100": A100, "h100": H100, "h200": H200, "b200": B200, "gh200": GH200,
-    "h100-paper": H100_PAPER, "h200-paper": H200_PAPER,
-    "b200-paper": B200_PAPER,
-    "tpu-v3": TPU_V3_CORE, "tpu-v5e": TPU_V5E,
+def get_system(name: str) -> System:
+    """Resolve a catalog id (or ``host``) from the default catalog.
+
+    Back-compat shim over
+    :meth:`repro.core.catalog.SystemRegistry.get`; sessions with their
+    own catalogs resolve through ``session.systems.get`` instead."""
+    from .catalog import default_registry
+    return default_registry().get(name)
+
+
+#: historical module-level constant -> catalog id (PEP 562 re-exports)
+_CATALOG_NAMES = {
+    "A100": "a100", "H100": "h100", "H200": "h200", "B200": "b200",
+    "GH200": "gh200", "H100_PAPER": "h100-paper",
+    "H200_PAPER": "h200-paper", "B200_PAPER": "b200-paper",
+    "TPU_V3_CORE": "tpu-v3", "TPU_V5E": "tpu-v5e",
 }
 
 
-def get_system(name: str) -> System:
-    if name == "host":
-        return host_system()
-    return SYSTEMS[name.lower()]
+def __getattr__(name: str):
+    """Back-compat: the Table-IV literals that used to live here resolve
+    from the shipped catalog (``from repro.core.systems import A100`` and
+    ``SYSTEMS`` keep working, and agree with the catalog by construction).
+    """
+    if name != "SYSTEMS" and name not in _CATALOG_NAMES:
+        # reject unknown names (incl. the import machinery's __path__
+        # probe) *before* touching catalog — importing it from here on
+        # such a probe would be circular
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    from .catalog import default_registry
+    if name == "SYSTEMS":
+        return default_registry().as_dict()
+    return default_registry().get(_CATALOG_NAMES[name])

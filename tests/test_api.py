@@ -1,0 +1,394 @@
+"""The ``repro.api`` facade: Session verbs, scoped registries,
+third-party backends through the public API only, the shipped ``table``
+estimator end-to-end, and the ``list`` CLI."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import api
+from repro.core.estimators.base import ComputeEstimator
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+GEMM_TEXT = """module @g {
+  func.func public @main(%arg0: tensor<64x32xbf16>, %arg1: tensor<32x48xbf16>) -> tensor<64x48xbf16> {
+    %0 = stablehlo.dot_general %arg0, %arg1, contracting_dims = [1] x [0], precision = [DEFAULT, DEFAULT] : (tensor<64x32xbf16>, tensor<32x48xbf16>) -> tensor<64x48xbf16>
+    return %0 : tensor<64x48xbf16>
+  }
+}
+"""
+
+
+def _gemm_spec(**overrides):
+    d = {
+        "name": "api-t",
+        "workloads": [{"name": "g", "fidelity": "raw",
+                       "gemm": {"m": 64, "n": 48, "k": 32}}],
+        "systems": ["a100"],
+        "estimators": [{"kind": "roofline"}],
+    }
+    d.update(overrides)
+    return d
+
+
+# module level so the class pickles by reference into process workers
+class FixedEstimator(ComputeEstimator):
+    """Third-party-style backend: constant latency per region."""
+    toolchain = "fixed"
+
+    def __init__(self, system, latency=1e-6):
+        super().__init__(system)
+        self.latency = float(latency)
+
+    @classmethod
+    def from_spec(cls, options, system, context):
+        return cls(system, latency=float(options.get("latency", 1e-6)))
+
+    def get_run_time_estimate(self, region):
+        return self.latency
+
+    @property
+    def cache_config_key(self):
+        return f"lat{self.latency!r}"
+
+
+MYCHIP = {
+    "name": "MyChip-1", "peak_flops": {"bf16": 5e14}, "mem_bw": 2e12,
+    "mem_capacity": 3.2e10,
+    "interconnect": {"kind": "all_to_all", "link_bw": 1e11},
+}
+
+
+class TestSessionBasics:
+    def test_describe_lists_vocabularies(self):
+        info = api.Session().describe()
+        assert "roofline" in info["estimators"]
+        assert "table" in info["estimators"]
+        assert "auto" in info["topologies"]
+        ids = {s["id"] for s in info["systems"]}
+        assert {"a100", "tpu-v3"} <= ids
+        a100 = next(s for s in info["systems"] if s["id"] == "a100")
+        assert a100["source"].endswith("a100.json")
+
+    def test_workload_plan_predict(self):
+        s = api.Session()
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        plan = s.plan(w, slicer="linear")
+        assert plan.fidelity == "raw" and plan.compute_regions
+        p = s.predict(plan, system="a100")
+        assert p.step_time_s > 0
+        # parity with the pre-facade entry points
+        from repro.core.estimators import RooflineEstimator
+        from repro.core.network import AllToAllNode
+        from repro.core.pipeline import predict
+        from repro.core.systems import get_system
+        ref = predict(w.program("raw"), RooflineEstimator(get_system("a100")),
+                      AllToAllNode(num_devices=4,
+                                   link_bw=get_system("a100")
+                                   .interconnect.link_bw),
+                      slicer="linear", name="g")
+        assert p.step_time_s == pytest.approx(ref.step_time_s)
+
+    def test_predict_accepts_live_objects(self):
+        from repro.core.estimators import RooflineEstimator
+        from repro.core.network import AllToAllNode
+        s = api.Session()
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        sysm = s.get_system("h100")
+        p = s.predict(w, system=sysm,
+                      estimator=RooflineEstimator(sysm),
+                      topology=AllToAllNode(num_devices=2))
+        assert p.system == sysm.name
+
+    def test_predict_bad_types_rejected(self):
+        s = api.Session()
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        with pytest.raises(TypeError, match="estimator"):
+            s.predict(w, estimator=42)
+        with pytest.raises(TypeError, match="topology"):
+            s.predict(w, topology=42)
+
+    def test_session_cache_store_shared_across_predicts(self):
+        s = api.Session()
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        p1 = s.predict(w, system="a100")
+        p2 = s.predict(w, system="a100")
+        assert p1.cache_stats.misses > 0
+        assert p2.cache_stats.misses == 0 and p2.cache_stats.hits > 0
+
+    def test_export_verb(self):
+        import jax
+        import jax.numpy as jnp
+        s = api.Session()
+        w = s.export(jax.jit(lambda x: jnp.tanh(x @ x)),
+                     jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                     name="tiny")
+        assert w.stablehlo_text and w.hlo_text
+        p = s.predict(w, system="a100")
+        assert p.step_time_s > 0
+
+    def test_persistent_cache_path_and_flush(self, tmp_path):
+        from repro.core.estimators.cache import PersistentCache
+        path = str(tmp_path / "hcr.jsonl")
+        s = api.Session(cache_path=path)
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        p = s.predict(w, system="a100")
+        assert p.cache_stats.misses > 0
+        s.flush_cache()
+        # a fresh session over the same path serves pure hits
+        s2 = api.Session(cache_path=path)
+        p2 = s2.predict(s2.workload(name="g", stablehlo=GEMM_TEXT),
+                        system="a100")
+        assert p2.cache_stats.misses == 0 and p2.cache_stats.hits > 0
+        assert len(PersistentCache(path)) > 0
+
+    def test_load_spec_helper(self):
+        spec = api.load_spec(os.path.join(REPO, "specs",
+                                          "fig10_gemm.json"))
+        assert spec.name == "fig10-gemm" and spec.num_points == 24
+
+    def test_campaign_accepts_dict_and_path(self, tmp_path):
+        s = api.Session()
+        res = s.campaign(_gemm_spec())
+        assert res.summary["num_failed"] == 0
+        path = tmp_path / "spec.json"
+        path.write_text(json.dumps(_gemm_spec()))
+        res2 = s.campaign(str(path))
+        assert [r["step_time_s"] for r in res2.ok_rows] == \
+            [r["step_time_s"] for r in res.ok_rows]
+
+    def test_campaign_path_spec_with_in_memory_workload(self, tmp_path):
+        """A spec *file* whose workload entry is name-only must accept
+        the workload supplied in-memory, same as the dict form."""
+        s = api.Session()
+        w = s.workload(name="mem", stablehlo=GEMM_TEXT)
+        path = tmp_path / "spec.json"
+        path.write_text(json.dumps(_gemm_spec(
+            workloads=[{"name": "mem", "fidelity": "raw"}])))
+        res = s.campaign(str(path), workloads={"mem": w})
+        assert res.summary["num_failed"] == 0
+
+
+class TestThirdPartyBackends:
+    """Acceptance: a custom estimator + custom system registered via the
+    public API only, driven from a campaign spec — no repro internals
+    edited."""
+
+    def test_custom_estimator_and_system_in_campaign(self):
+        s = api.Session()
+        s.register_estimator("fixed", FixedEstimator)
+        s.register_system("mychip", MYCHIP)
+        res = s.campaign(_gemm_spec(
+            systems=["mychip"],
+            estimators=[{"kind": "fixed", "options": {"latency": 3e-6}}]))
+        assert res.summary["num_failed"] == 0
+        (row,) = res.ok_rows
+        assert row["system"] == "mychip"
+        assert row["toolchain"] == "fixed"
+        assert row["compute_s"] == pytest.approx(3e-6)
+
+    def test_custom_backends_cross_process_boundary(self, tmp_path):
+        s = api.Session()
+        s.register_estimator("fixed", FixedEstimator)
+        s.register_system("mychip", MYCHIP)
+        res = s.campaign(
+            _gemm_spec(
+                systems=["mychip", "a100"],
+                estimators=[{"kind": "fixed",
+                             "options": {"latency": 3e-6}}]),
+            executor="process", max_workers=2)
+        assert res.summary["num_failed"] == 0
+        assert {r["system"] for r in res.ok_rows} == {"mychip", "a100"}
+        for row in res.ok_rows:
+            assert row["compute_s"] == pytest.approx(3e-6)
+
+    def test_scoped_kinds_do_not_leak(self):
+        s = api.Session()
+        s.register_estimator("fixed", FixedEstimator)
+        s.register_system("mychip", MYCHIP)
+        with pytest.raises(ValueError, match="unknown estimator kind"):
+            api.Session().campaign(_gemm_spec(
+                estimators=[{"kind": "fixed"}]))
+        with pytest.raises(ValueError, match="unknown system"):
+            api.Session().campaign(_gemm_spec(systems=["mychip"]))
+
+    def test_custom_topology_kind(self):
+        from repro.core.network.topology import AllToAllNode
+        s = api.Session()
+
+        @s.register_topology("pair")
+        class PairTopology:
+            @classmethod
+            def from_spec(cls, params, system, context):
+                return AllToAllNode(num_devices=2,
+                                    link_bw=system.interconnect.link_bw)
+
+        res = s.campaign(_gemm_spec(topologies=[{"kind": "pair"}]))
+        assert res.summary["num_failed"] == 0
+        assert res.ok_rows[0]["topology"] == "pair"
+
+    def test_spec_system_catalog_field(self, tmp_path):
+        path = tmp_path / "mychip.json"
+        path.write_text(json.dumps({"id": "mychip", **MYCHIP}))
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps(_gemm_spec(
+            systems=["mychip"], system_catalog=["mychip.json"])))
+        # no session at all: the spec's own catalog paths suffice
+        from repro.campaign.spec import CampaignSpec
+        from repro.campaign.runner import run_campaign
+        spec = CampaignSpec.from_json(str(spec_path))
+        res = run_campaign(spec)
+        assert res.summary["num_failed"] == 0
+        assert res.ok_rows[0]["system"] == "mychip"
+
+
+class TestTableEstimator:
+    """The shipped proof-of-extensibility backend: record once with any
+    estimator, replay from JSON through the same registry path."""
+
+    def _profile(self, s, tmp_path):
+        from repro.core.estimators import (RooflineEstimator,
+                                           record_profile, save_profile)
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        plan = s.plan(w)
+        table = record_profile(plan.compute_regions,
+                               RooflineEstimator(s.get_system("a100")))
+        assert table
+        path = str(tmp_path / "profile.json")
+        save_profile(path, table, meta={"system": "a100"})
+        return w, plan, table, path
+
+    def test_record_replay_roundtrip(self, tmp_path):
+        s = api.Session()
+        w, plan, table, path = self._profile(s, tmp_path)
+        ref = s.predict(plan, system="a100", estimator="roofline")
+        rep = s.predict(plan, system="a100", estimator="table",
+                        options={"path": path})
+        assert rep.step_time_s == pytest.approx(ref.step_time_s)
+        assert rep.estimator == "table"
+
+    def test_table_from_campaign_spec(self, tmp_path):
+        s = api.Session()
+        _, _, _, path = self._profile(s, tmp_path)
+        res = s.campaign(_gemm_spec(
+            estimators=[{"kind": "roofline"},
+                        {"kind": "table", "options": {"path": path}}]))
+        assert res.summary["num_failed"] == 0
+        by_est = {r["estimator"]: r["step_time_s"] for r in res.ok_rows}
+        assert by_est["table"] == pytest.approx(by_est["roofline"])
+
+    def test_table_scale_and_default(self, tmp_path):
+        from repro.core.estimators import TableEstimator
+        s = api.Session()
+        _, plan, table, path = self._profile(s, tmp_path)
+        scaled = s.predict(plan, system="a100", estimator="table",
+                           options={"path": path, "scale": 2.0})
+        base = s.predict(plan, system="a100", estimator="table",
+                         options={"path": path})
+        assert scaled.compute_s == pytest.approx(2 * base.compute_s)
+        # uncovered fingerprint: strict raise vs default
+        est = TableEstimator(s.get_system("a100"), {})
+        region = plan.compute_regions[0]
+        with pytest.raises(KeyError, match="no recorded latency"):
+            est.get_run_time_estimate(region)
+        assert not est.supports(region)
+        est_d = TableEstimator(s.get_system("a100"), {}, default=7e-6)
+        assert est_d.get_run_time_estimate(region) == 7e-6
+
+    def test_table_profile_path_relative_to_spec_file(self, tmp_path):
+        """A spec-file table estimator resolves its profile against the
+        spec's directory, not the CWD — including across the process
+        boundary."""
+        s = api.Session()
+        _, _, table, _ = self._profile(s, tmp_path)
+        from repro.core.estimators import save_profile
+        save_profile(str(tmp_path / "prof.json"), table)
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps(_gemm_spec(
+            estimators=[{"kind": "table",
+                         "options": {"path": "prof.json"}}])))
+        assert not os.path.exists("prof.json")  # CWD must not matter
+        for executor in ("serial", "process"):
+            res = api.Session().campaign(str(spec_path),
+                                         executor=executor)
+            assert res.summary["num_failed"] == 0, res.rows
+
+    def test_missing_path_option(self):
+        s = api.Session()
+        w = s.workload(name="g", stablehlo=GEMM_TEXT)
+        with pytest.raises(ValueError, match="options.path"):
+            s.predict(w, estimator="table")
+
+    def test_profile_format_errors(self, tmp_path):
+        from repro.core.estimators import load_profile
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps([1, 2]))
+        with pytest.raises(ValueError, match="fingerprint"):
+            load_profile(str(bad))
+        flat = tmp_path / "flat.json"
+        flat.write_text(json.dumps({"fp1": 1e-6}))
+        assert load_profile(str(flat)) == {"fp1": 1e-6}
+
+    def test_distinct_profiles_do_not_share_cache_keys(self, tmp_path):
+        from repro.core.estimators import TableEstimator
+        sysm = api.Session().get_system("a100")
+        a = TableEstimator(sysm, {"fp": 1e-6})
+        b = TableEstimator(sysm, {"fp": 2e-6})
+        assert a.cache_config_key != b.cache_config_key
+        assert a.cache_config_key == TableEstimator(
+            sysm, {"fp": 1e-6}).cache_config_key
+
+
+class TestAutoTopologyMismatch:
+    def test_torus_num_devices_mismatch_raises(self):
+        s = api.Session()
+        res = s.campaign(_gemm_spec(
+            systems=["tpu-v3"],   # dims (4, 2) -> 8 devices
+            topologies=[{"kind": "auto", "params": {"num_devices": 4}}]))
+        assert res.summary["num_failed"] == 1
+        assert "num_devices=4" in res.rows[0]["error"]
+        assert "dims=(4, 2)" in res.rows[0]["error"]
+
+    def test_torus_matching_or_omitted_ok(self):
+        s = api.Session()
+        for topo in ({"kind": "auto"},
+                     {"kind": "auto", "params": {"num_devices": 8}}):
+            res = s.campaign(_gemm_spec(systems=["tpu-v3"],
+                                        topologies=[topo]))
+            assert res.summary["num_failed"] == 0
+
+    def test_a2a_num_devices_still_honored(self):
+        s = api.Session()
+        res = s.campaign(_gemm_spec(
+            systems=["a100"],
+            topologies=[{"kind": "auto", "params": {"num_devices": 4}}]))
+        assert res.summary["num_failed"] == 0
+
+
+class TestListCLI:
+    def test_list_prints_vocabularies_and_sources(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.campaign", "list", "--check"],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+        assert p.returncode == 0, p.stdout + p.stderr
+        assert "estimator kinds:" in p.stdout
+        assert "table" in p.stdout
+        assert "a100" in p.stdout
+        assert "specs/systems/a100.json" in p.stdout
+        assert "0 failure(s)" in p.stdout
+
+    def test_list_check_rejects_bad_catalog(self, tmp_path):
+        (tmp_path / "bad.json").write_text(json.dumps({"id": "bad"}))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.campaign", "list", "--check",
+             "--systems", str(tmp_path)],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+        assert p.returncode == 1
+        assert "INVALID" in p.stdout

@@ -1,0 +1,216 @@
+"""Registry + system-catalog contract: open vocabularies, error paths,
+catalog round-trips, and the back-compat shims over both."""
+import json
+import os
+
+import pytest
+
+from repro.core.catalog import (SystemRegistry, default_registry,
+                                validate_system_dict)
+from repro.core.registry import (ESTIMATORS, TOPOLOGIES, BuildContext,
+                                 Registry, register_estimator,
+                                 register_topology)
+from repro.core.systems import Interconnect, System
+
+
+def _backend(kind_label="x"):
+    class Backend:
+        @classmethod
+        def from_spec(cls, options, system, context):
+            return cls()
+    Backend.__name__ = f"Backend_{kind_label}"
+    return Backend
+
+
+class TestRegistry:
+    def test_register_and_get(self):
+        reg = Registry("estimator")
+        cls = _backend()
+        reg.register("mine", cls)
+        assert "mine" in reg
+        assert reg.get("mine") is cls
+        assert "mine" in reg.kinds()
+
+    def test_decorator_form(self):
+        reg = Registry("estimator")
+
+        @reg.register("deco")
+        class Deco:
+            @classmethod
+            def from_spec(cls, options, system, context):
+                return cls()
+
+        assert reg.get("deco") is Deco
+
+    def test_duplicate_kind_is_error(self):
+        reg = Registry("estimator")
+        reg.register("mine", _backend())
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("mine", _backend())
+
+    def test_duplicate_builtin_kind_is_error(self):
+        scope = ESTIMATORS.scope()
+        with pytest.raises(ValueError, match="already registered"):
+            scope.register("roofline", _backend())
+
+    def test_replace_overrides(self):
+        reg = Registry("estimator")
+        reg.register("mine", _backend())
+        new = _backend("new")
+        reg.register("mine", new, replace=True)
+        assert reg.get("mine") is new
+
+    def test_backend_without_from_spec_rejected(self):
+        reg = Registry("estimator")
+        with pytest.raises(TypeError, match="from_spec"):
+            reg.register("bad", object)
+
+    def test_unknown_kind_suggestion(self):
+        with pytest.raises(ValueError, match="did you mean 'roofline'"):
+            ESTIMATORS.get("rooflien")
+        msg = TOPOLOGIES.unknown_message("torsu")
+        assert "unknown topology kind 'torsu'" in msg
+        assert "did you mean 'torus'" in msg
+
+    def test_builtin_kinds_resolve_lazily(self):
+        # names are known without importing backends; get() resolves
+        for kind in ("roofline", "systolic", "mixed", "profiling",
+                     "table"):
+            assert kind in ESTIMATORS
+            assert kind in ESTIMATORS.kinds()
+            assert hasattr(ESTIMATORS.get(kind), "from_spec")
+        for kind in ("auto", "a2a", "dragonfly", "torus", "multipod"):
+            assert kind in TOPOLOGIES
+            assert hasattr(TOPOLOGIES.get(kind), "from_spec")
+
+    def test_scope_falls_back_and_stays_local(self):
+        scope = ESTIMATORS.scope()
+        cls = _backend()
+        scope.register("scoped-kind", cls)
+        assert scope.get("scoped-kind") is cls
+        assert scope.get("roofline") is ESTIMATORS.get("roofline")
+        assert "scoped-kind" not in ESTIMATORS          # global untouched
+        assert "scoped-kind" in scope.kinds()
+        assert scope.local_entries() == {"scoped-kind": cls}
+
+    def test_global_decorators_route_to_globals(self):
+        cls = _backend()
+        try:
+            register_estimator("tmp-global-est", cls)
+            assert ESTIMATORS.get("tmp-global-est") is cls
+        finally:
+            ESTIMATORS._entries.pop("tmp-global-est", None)
+        cls2 = _backend()
+        try:
+            register_topology("tmp-global-topo", cls2)
+            assert TOPOLOGIES.get("tmp-global-topo") is cls2
+        finally:
+            TOPOLOGIES._entries.pop("tmp-global-topo", None)
+
+
+class TestSpecKindsShim:
+    def test_spec_module_tuples_are_live(self):
+        from repro.campaign import spec
+        assert spec.ESTIMATOR_KINDS == ESTIMATORS.kinds()
+        assert spec.TOPOLOGY_KINDS == TOPOLOGIES.kinds()
+        assert "roofline" in spec.ESTIMATOR_KINDS
+        assert "auto" in spec.TOPOLOGY_KINDS
+        # from-import form keeps working
+        from repro.campaign.spec import ESTIMATOR_KINDS
+        assert "table" in ESTIMATOR_KINDS
+
+
+class TestSystemCatalog:
+    def test_roundtrip_every_shipped_system(self):
+        from repro.core.systems import SYSTEMS
+        assert len(SYSTEMS) >= 10
+        for sid, s in SYSTEMS.items():
+            rt = System.from_dict(json.loads(json.dumps(s.to_dict())))
+            assert rt == s, sid
+
+    def test_backcompat_imports_agree_with_catalog(self):
+        from repro.core.systems import (A100, SYSTEMS, TPU_V3_CORE,
+                                        get_system)
+        reg = default_registry()
+        assert A100 == reg.get("a100") == SYSTEMS["a100"]
+        assert TPU_V3_CORE == reg.get("tpu-v3")
+        assert get_system("h100") == reg.get("h100")
+        assert set(SYSTEMS) == set(reg.names())
+        with pytest.raises(AttributeError):
+            from repro.core import systems
+            systems.NOT_A_SYSTEM  # noqa: B018
+
+    def test_catalog_sources_are_files(self):
+        reg = default_registry()
+        for sid in reg.names():
+            assert reg.source(sid).endswith(f"{sid}.json")
+            assert os.path.exists(reg.source(sid))
+
+    def test_interconnect_tuple_params_roundtrip(self):
+        ic = Interconnect("torus2d", link_bw=1e9, params={"dims": (4, 2)})
+        rt = Interconnect.from_dict(json.loads(json.dumps(ic.to_dict())))
+        assert rt == ic
+        assert rt.params["dims"] == (4, 2)
+
+    def test_register_and_shadow(self, tmp_path):
+        reg = default_registry().scope()
+        a100 = default_registry().get("a100")
+        custom = System.from_dict(dict(a100.to_dict(), name="Custom"))
+        reg.register("mychip", custom)
+        assert reg.get("mychip").name == "Custom"
+        assert reg.source("mychip") == "<api>"
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("mychip", custom)
+        # shadowing a parent entry is allowed (user catalog overrides)
+        reg.register("a100", custom)
+        assert reg.get("a100").name == "Custom"
+        assert default_registry().get("a100").name == a100.name
+
+    def test_host_reserved_and_resolvable(self):
+        reg = default_registry()
+        assert "host" in reg
+        with pytest.raises(ValueError, match="reserved"):
+            reg.scope().register("host", reg.get("a100"))
+
+    def test_unknown_system_suggestion(self):
+        with pytest.raises(KeyError, match="did you mean 'a100'"):
+            default_registry().get("a100x")
+
+    def test_load_catalog_file_and_dir(self, tmp_path):
+        rec = dict(default_registry().get("a100").to_dict(),
+                   name="FileChip")
+        path = tmp_path / "filechip.json"
+        path.write_text(json.dumps({"id": "filechip", **rec}))
+        reg = default_registry().scope()
+        assert reg.load_path(str(tmp_path)) == ["filechip"]
+        assert reg.get("filechip").name == "FileChip"
+        assert reg.source("filechip") == str(path)
+
+    def test_schema_validation_errors(self, tmp_path):
+        good = {"id": "x", **default_registry().get("a100").to_dict()}
+        validate_system_dict(good)
+        for mutate, match in [
+                (lambda d: d.pop("peak_flops"), "missing"),
+                (lambda d: d.update(peak_flops={}), "peak_flops"),
+                (lambda d: d.update(mem_bw=-1), "mem_bw"),
+                (lambda d: d.update(bogus=1), "unknown system fields"),
+                (lambda d: d.update(interconnect={"kind": "x"}),
+                 "interconnect"),
+                (lambda d: d["interconnect"].update(bogus=3),
+                 "unknown interconnect fields")]:
+            d = json.loads(json.dumps(good))
+            mutate(d)
+            with pytest.raises(ValueError, match=match):
+                validate_system_dict(d)
+        bad = tmp_path / "bad.json"
+        bad.write_text("{nope")
+        with pytest.raises(ValueError, match="not valid JSON"):
+            SystemRegistry().load_file(str(bad))
+
+
+class TestBuildContext:
+    def test_resolve_path(self, tmp_path):
+        ctx = BuildContext(base_dir=str(tmp_path))
+        assert ctx.resolve_path("p.json") == str(tmp_path / "p.json")
+        assert ctx.resolve_path("/abs/p.json") == "/abs/p.json"
+        assert BuildContext().resolve_path("p.json") == "p.json"
