@@ -25,6 +25,7 @@ FIGURES = {
     "caching": "caching_exp",
     "micro": "micro_bench",
     "campaign": "bench_campaign",
+    "serve": "bench_serve",
 }
 
 

@@ -1,0 +1,92 @@
+"""Talk to the warm prediction daemon: boot `python -m repro.serve`,
+then ask what-if questions over HTTP without ever paying cold start
+again.
+
+Self-contained — boots its own daemon on an ephemeral port with the
+Fig 10 GEMM spec preloaded, runs a few predictions and a streamed
+campaign through :class:`repro.serve.client.ServeClient`, prints the
+daemon's warm-state counters, and shuts it down gracefully.
+
+    PYTHONPATH=src python examples/serve_client.py
+
+Point ``--url`` at an already-running daemon to skip the boot.
+See docs/serving.md for the endpoint reference.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.serve.client import ServeClient
+
+SPEC = os.path.join("specs", "fig10_gemm.json")
+
+
+def boot_daemon() -> tuple[subprocess.Popen, str]:
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve", "--port", "0",
+         "--preload", SPEC],
+        env=env, stdout=subprocess.PIPE, text=True)
+    url = json.loads(proc.stdout.readline())["url"]  # first stdout line
+    return proc, url
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default=None,
+                    help="existing daemon URL (default: boot one)")
+    args = ap.parse_args()
+
+    daemon = None
+    if args.url:
+        url = args.url
+    else:
+        daemon, url = boot_daemon()
+        print(f"booted daemon at {url}")
+
+    client = ServeClient(url)
+    client.wait_ready()
+
+    # --- single predictions: preloaded workloads are already planned ---
+    print(f"\n{'workload':12s} {'preset':10s} {'step time':>12s}")
+    for preset in ("onnxim", "scalesim"):
+        row = client.predict("gemm-1024", system="tpu-v3",
+                             estimator={"kind": "systolic",
+                                        "options": {"preset": preset}})
+        print(f"{row['workload']:12s} {preset:10s} "
+              f"{row['step_time_s']*1e6:10.2f}us")
+
+    # a workload the daemon has never seen ships its own source
+    row = client.predict(
+        {"name": "whatif-2048", "fidelity": "raw",
+         "gemm": {"m": 2048, "n": 2048, "k": 2048, "dtype": "bf16"}},
+        system="tpu-v3", estimator="roofline")
+    print(f"{row['workload']:12s} {'roofline':10s} "
+          f"{row['step_time_s']*1e6:10.2f}us")
+
+    # --- a streamed campaign: rows arrive as jobs finish ---
+    stream = client.campaign(spec_path=os.path.abspath(SPEC))
+    rows, summary = stream.collect()
+    print(f"\ncampaign {summary['campaign']}: {len(rows)} rows, "
+          f"{summary['num_failed']} failed")
+
+    # --- the daemon's warm state, by the numbers ---
+    st = client.stats()
+    print(f"stats: {st['predict']['served']} predicts "
+          f"({st['predict']['cache_hits']} cache hits, "
+          f"{st['predict']['duplicate_cold_misses']} duplicate cold "
+          f"misses), plans resident {st['plans']['resident']}, "
+          f"parse calls {st['plans']['parse_calls']}")
+
+    if daemon is not None:
+        client.shutdown()
+        daemon.wait(timeout=30)
+        print("daemon drained and exited")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,6 +64,7 @@ class Session:
             self.systems.load_path(p)
         self.cache_path = cache_path
         self._store = None
+        self._plan_store = None
 
     # ------------------------- extension surface -------------------------
 
@@ -93,15 +94,28 @@ class Session:
 
     @property
     def cache_store(self):
-        """The session's shared (H, C, R) store (created lazily; an
-        in-memory dict when the session has no ``cache_path``)."""
+        """The session's shared (H, C, R) store (created lazily; a
+        :class:`~repro.core.estimators.cache.PersistentCache`, purely
+        in-memory when the session has no ``cache_path``).  Every
+        predict *and* campaign run through this session shares it, so a
+        long-lived session — e.g. the ``repro.serve`` daemon — pays each
+        cold miss once across its whole lifetime."""
         if self._store is None:
-            if self.cache_path:
-                from .core.estimators.cache import PersistentCache
-                self._store = PersistentCache(self.cache_path)
-            else:
-                self._store = {}
+            from .core.estimators.cache import PersistentCache
+            self._store = PersistentCache(self.cache_path)
         return self._store
+
+    @property
+    def plan_store(self):
+        """The session's warm plan store: parsed programs and sliced
+        :class:`~repro.core.pipeline.PredictionPlan`s shared by every
+        campaign run through this session (see
+        :meth:`~repro.campaign.plans.PlanStore.add_texts` for the
+        stale-name invalidation rule)."""
+        if self._plan_store is None:
+            from .campaign.plans import PlanStore
+            self._plan_store = PlanStore()
+        return self._plan_store
 
     def flush_cache(self) -> None:
         """Compact the persistent store (no-op without a ``cache_path``)."""
@@ -216,8 +230,11 @@ class Session:
 
         ``spec`` is a CampaignSpec, a spec dict, or a path to a spec
         JSON; everything else mirrors
-        :func:`repro.campaign.runner.run_campaign`.  The session's
-        ``cache_path`` backs the run unless overridden here."""
+        :func:`repro.campaign.runner.run_campaign`.  The session's live
+        :attr:`cache_store` and :attr:`plan_store` back the run (so
+        repeated campaigns through one session re-parse nothing and
+        re-pay no cold miss) unless ``cache_path`` redirects the run to
+        a different store file."""
         from .campaign.runner import run_campaign
         from .campaign.spec import CampaignSpec
         provided = frozenset(workloads or ())
@@ -227,10 +244,13 @@ class Session:
         elif isinstance(spec, dict):
             spec = CampaignSpec.from_dict(spec, session=self,
                                           provided=provided)
+        warm = cache_path is None or cache_path == self.cache_path
         return run_campaign(
             spec, workloads=workloads, out_dir=out_dir, executor=executor,
             max_workers=max_workers,
             cache_path=cache_path or self.cache_path,
+            cache=self.cache_store if warm else None,
+            plan_store=self.plan_store,
             schedule=schedule, progress=progress, session=self)
 
     # ----------------------------- listing -----------------------------

@@ -349,6 +349,13 @@ def main(argv: list[str] | None = None) -> int:
                              "(default: locality)")
         ap.add_argument("--dry-run", action="store_true",
                         help="print the expanded grid and exit")
+        ap.add_argument("--server", default=None, metavar="URL",
+                        help="run on a warm repro.serve daemon (e.g. "
+                             "http://127.0.0.1:8733) instead of "
+                             "in-process: rows stream back over HTTP and "
+                             "the same artifacts are written locally; "
+                             "--cache is ignored (the daemon owns the "
+                             "store)")
     if command == "report":
         ap.add_argument("--out", default="artifacts/report",
                         help="output directory: campaign artifacts + "
@@ -404,11 +411,11 @@ def main(argv: list[str] | None = None) -> int:
             print(f"ok {path}")
         return 1 if bad else 0
 
-    from .runner import run_campaign
     from .summary import format_table
 
     specs = load_specs(args.spec, session=session)
-    _preset_device_count(specs)
+    if not args.server:
+        _preset_device_count(specs)
     multi = len(specs) > 1
     failed = 0
     for name, spec in specs:
@@ -421,17 +428,58 @@ def main(argv: list[str] | None = None) -> int:
                                          "estimator", "slicer", "topology")))
             continue
         out_dir = os.path.join(args.out, name) if multi else args.out
-        result = run_campaign(
-            spec, out_dir=out_dir, executor=args.executor,
-            max_workers=args.jobs, cache_path=args.cache,
-            schedule=args.schedule, progress=not args.quiet,
-            session=session)
-        print(format_table(result.summary))
-        if result.csv_path:
-            print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
-                  f"{result.summary_path}")
-        failed += result.summary["num_failed"]
+        if args.server:
+            summary = _run_on_server(args, spec, name, multi, out_dir)
+        else:
+            from .runner import run_campaign
+
+            result = run_campaign(
+                spec, out_dir=out_dir, executor=args.executor,
+                max_workers=args.jobs, cache_path=args.cache,
+                schedule=args.schedule, progress=not args.quiet,
+                session=session)
+            summary = result.summary
+            if result.csv_path:
+                print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
+                      f"{result.summary_path}")
+        print(format_table(summary))
+        failed += summary["num_failed"]
     return 1 if failed else 0
+
+
+def _run_on_server(args, spec: CampaignSpec, name: str, multi: bool,
+                   out_dir: str) -> dict:
+    """Run one campaign on a warm ``repro.serve`` daemon: stream the
+    rows back and materialize the standard artifact set locally, so
+    downstream tooling (``report --results``, the CI golden diff) sees
+    exactly what an in-process run would have written.  A single spec
+    file ships as its path (daemon and CLI are localhost peers, and the
+    path preserves ``base_dir`` for backend-relative files); suite
+    sub-campaigns ship as inline dicts."""
+    from ..serve.client import ServeClient, write_campaign_artifacts
+
+    client = ServeClient(args.server)
+    kwargs: dict = {"executor": args.executor, "schedule": args.schedule,
+                    "max_workers": args.jobs}
+    if multi:
+        kwargs["spec"] = spec.to_dict()
+    else:
+        kwargs["spec_path"] = os.path.abspath(args.spec)
+    stream = client.campaign(**kwargs)
+    rows = []
+    for row in stream:
+        rows.append(row)
+        if not args.quiet:
+            tag = (f"{row['step_time_s'] * 1e3:9.3f} ms"
+                   if "step_time_s" in row else f"ERROR {row.get('error')}")
+            print(f"  [{row['job_id']:4d}] {row['workload']} × "
+                  f"{row['system']} × {row['estimator']} × "
+                  f"{row['slicer']}: {tag}", flush=True)
+    summary = stream.summary or {}
+    paths = write_campaign_artifacts(rows, summary, out_dir)
+    print(f"  wrote {paths['jsonl']}, {paths['csv']}, {paths['summary']} "
+          f"(served by {args.server})")
+    return summary
 
 
 if __name__ == "__main__":

@@ -34,14 +34,35 @@ class PlanStore:
     and tests assert on them).
     """
 
-    def __init__(self, texts: dict[str, dict]):
-        self.texts = texts
+    def __init__(self, texts: dict[str, dict] | None = None):
+        self.texts = dict(texts or {})
         self._programs: dict[tuple[str, str], Program] = {}
         self._plans: dict[PlanKey, PredictionPlan] = {}
         self._fingerprints: dict[PlanKey, frozenset] = {}
         self._lock = threading.Lock()
         self.parse_count = 0    # programs parsed: one per (workload, fidelity)
         self.plans_built = 0    # slicer runs: one per (workload, fid, slicer)
+
+    def add_texts(self, texts: dict[str, dict]) -> None:
+        """Fold more workload texts into the store (long-lived stores —
+        a warm server, a multi-campaign session — grow one store instead
+        of rebuilding it per campaign).
+
+        Re-registering a name with *identical* texts keeps its parsed
+        programs and plans hot; binding a name to *different* text drops
+        everything cached under that name first, so a reused workload
+        name can never serve a stale plan."""
+        with self._lock:
+            for name, t in texts.items():
+                old = self.texts.get(name)
+                if old == t:
+                    continue
+                if old is not None:
+                    for memo in (self._programs, self._plans,
+                                 self._fingerprints):
+                        for key in [k for k in memo if k[0] == name]:
+                            del memo[key]
+                self.texts[name] = t
 
     def effective_fidelity(self, workload: str, fidelity: str) -> str:
         """The fidelity actually costed: optimized falls back to raw when
@@ -114,15 +135,20 @@ class PlanStore:
 
     # --------------------------- plan files ---------------------------
 
-    def dump(self, dir_path: str) -> dict[PlanKey, str]:
-        """Pickle every built plan into ``dir_path``; returns key -> path.
+    def dump(self, dir_path: str,
+             keys: set | None = None) -> dict[PlanKey, str]:
+        """Pickle built plans into ``dir_path``; returns key -> path.
 
         This is how plans cross the process-pool boundary: workers
         receive the (tiny) path map and unpickle only the plans their
-        jobs reference — no workload text ever ships to a worker."""
+        jobs reference — no workload text ever ships to a worker.
+        ``keys`` restricts the dump to the plans one campaign actually
+        references (a warm store may hold many more)."""
         os.makedirs(dir_path, exist_ok=True)
+        items = sorted(k_p for k_p in self._plans.items()
+                       if keys is None or k_p[0] in keys)
         paths: dict[PlanKey, str] = {}
-        for i, (key, plan) in enumerate(sorted(self._plans.items())):
+        for i, (key, plan) in enumerate(items):
             slug = re.sub(r"[^\w.-]+", "_", "-".join(key))
             path = os.path.join(dir_path, f"{i:03d}-{slug}{PLAN_FILE_SUFFIX}")
             with open(path, "wb") as f:

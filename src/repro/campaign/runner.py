@@ -298,8 +298,11 @@ def run_campaign(spec: CampaignSpec, *,
                  executor: str = "serial",
                  max_workers: int | None = None,
                  cache_path: str | None = None,
+                 cache: PersistentCache | None = None,
+                 plan_store: PlanStore | None = None,
                  schedule: str = "locality",
                  progress: bool = False,
+                 on_row=None,
                  session=None) -> CampaignResult:
     """Expand ``spec`` into jobs, plan, run them, and collect/stream
     results.
@@ -316,7 +319,16 @@ def run_campaign(spec: CampaignSpec, *,
     persisted per-key costs.  ``session`` (a :class:`repro.api.Session`)
     supplies scoped registries — plugin estimator/topology kinds and
     user system catalogs — that jobs build against; without one the
-    global registries and the spec's own ``system_catalog`` apply."""
+    global registries and the spec's own ``system_catalog`` apply.
+
+    Long-lived callers (``repro.serve``, a multi-campaign session) pass
+    ``cache`` — an already-open :class:`PersistentCache`, in place of a
+    fresh one built from ``cache_path`` — and ``plan_store`` — a warm
+    :class:`PlanStore` whose parsed programs and plans carry over, so a
+    repeated campaign re-parses nothing.  The returned cache/plan
+    reports count only *this* run's activity (deltas against the warm
+    store's counters); ``on_row(row)`` observes each result row as it
+    completes (the serve daemon streams these to HTTP clients)."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
     if schedule not in SCHEDULES:
@@ -327,10 +339,22 @@ def run_campaign(spec: CampaignSpec, *,
     jobs = spec.expand()
     texts = _workload_texts(spec, workloads)
 
-    cache = PersistentCache(cache_path) if cache_path else PersistentCache()
-    loaded = cache.loaded_entries
+    if cache is None:
+        cache = (PersistentCache(cache_path) if cache_path
+                 else PersistentCache())
+        loaded = cache.loaded_entries
+    else:
+        # a warm store: entries present now were "loaded" for this run
+        cache_path = cache_path or cache.path
+        loaded = len(cache)
+    lock0 = cache.lock_roundtrips
 
-    plans = PlanStore(texts)
+    if plan_store is None:
+        plans = PlanStore(texts)
+    else:
+        plans = plan_store
+        plans.add_texts(texts)
+    parse0, built0 = plans.parse_count, plans.plans_built
     plan_keys, plan_errors = _build_plans(jobs, plans)
 
     jsonl_path = None
@@ -346,6 +370,8 @@ def run_campaign(spec: CampaignSpec, *,
             with jsonl_lock:
                 jsonl_file.write(json.dumps(row) + "\n")
                 jsonl_file.flush()
+        if on_row is not None:
+            on_row(row)
         if progress:
             tag = (f"{row['step_time_s'] * 1e3:9.3f} ms"
                    if "step_time_s" in row else f"ERROR {row.get('error')}")
@@ -407,14 +433,17 @@ def run_campaign(spec: CampaignSpec, *,
         "time_saving_fraction": saved / (saved + miss_cost)
         if (saved + miss_cost) > 0 else 0.0,
         # parent-side flock acquisitions (load/refresh/append/compact)
-        "lock_roundtrips": cache.lock_roundtrips,
+        # during *this* run (a warm store keeps its lifetime counter)
+        "lock_roundtrips": cache.lock_roundtrips - lock0,
     }
     plan_report = {
         "schedule": schedule,
         "jobs": len(jobs),
         "plan_keys": len({plan_keys[j.job_id] for j in jobs}),
-        "parse_calls": plans.parse_count,
-        "plans_built": plans.plans_built,
+        # this run's parse/slice work only: zero on a warm plan store
+        # that already holds every referenced plan
+        "parse_calls": plans.parse_count - parse0,
+        "plans_built": plans.plans_built - built0,
         "plan_errors": len(plan_errors),
     }
     summary = summarize(spec.name, rows)
@@ -533,7 +562,11 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
     plan_dir = (os.path.join(out_dir, "plans") if out_dir
                 else tempfile.mkdtemp(prefix="repro-plans-"))
     try:
-        plan_paths = plans.dump(plan_dir)
+        # ship only the plans this campaign references — a warm store
+        # may hold plans from earlier campaigns these workers never run
+        plan_paths = plans.dump(
+            plan_dir, keys={plan_keys[j.job_id]
+                            for chain in chains for j in chain})
         local_regs = (regs or _Registries()).local_entries()
         if not any(local_regs):
             local_regs = None     # nothing scoped: workers use globals

@@ -147,11 +147,22 @@ class EstimatorSpec:
         """The options pairs as a plain dict."""
         return dict(self.options)
 
+    #: option names the builtin estimator kinds consume — the only ones
+    #: :attr:`label` spells out readably
+    _LABEL_OPTIONS = ("mode", "include_overheads", "preset", "runs")
+
     @property
     def label(self) -> str:
         """Unique within any well-formed estimator axis: every field that
         distinguishes two entries appears (summaries and consumer index
-        dicts key rows on this)."""
+        dicts key rows on this).
+
+        Builtin option names render readably; any OTHER options — a
+        plugin kind's knobs, a ``table`` estimator's profile path —
+        contribute a stable 8-hex digest, so two custom-kind entries
+        differing only in such options cannot alias to one label (which
+        would silently merge their rows in every label-keyed consumer).
+        """
         opts = self.options_dict
         bits = [self.kind]
         if opts.get("mode"):
@@ -162,6 +173,12 @@ class EstimatorSpec:
             bits.append(str(opts["preset"]))
         if opts.get("runs"):
             bits.append(f"runs{opts['runs']}")
+        extra = tuple((k, v) for k, v in self.options
+                      if k not in self._LABEL_OPTIONS)
+        if extra:
+            import hashlib
+            bits.append(hashlib.sha1(
+                repr(extra).encode()).hexdigest()[:8])
         label = "-".join(bits)
         if self.fidelity:
             label += f"@{self.fidelity}"

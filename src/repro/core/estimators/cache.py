@@ -147,6 +147,20 @@ class PersistentCache:
         (0.0 when the producing run predates cost persistence)."""
         return self.costs.get(key, 0.0)
 
+    def stats_dict(self) -> dict:
+        """The store's live accounting, JSON-ready — what long-lived
+        holders (the serve daemon's ``/stats``, campaign summaries)
+        surface without reaching into internals."""
+        with self._lock:
+            return {
+                "path": self.path,
+                "entries": len(self.entries),
+                "loaded_entries": self.loaded_entries,
+                "persisted_cost_seconds": round(
+                    sum(self.costs.values()), 6),
+                "lock_roundtrips": self.lock_roundtrips,
+            }
+
     # ------------------------------ log I/O ------------------------------
 
     def _absorb_line(self, line: str) -> int:

@@ -1,3 +1,37 @@
-from .decode import ServeResult, greedy_decode, make_serve_step
+"""Serving: the warm prediction daemon + the decode-loop workload.
 
-__all__ = ["ServeResult", "greedy_decode", "make_serve_step"]
+Two unrelated-but-cohabiting halves:
+
+* **prediction-as-a-service** — :mod:`repro.serve.server` (the
+  long-lived HTTP daemon holding one warm :class:`repro.api.Session`)
+  and :mod:`repro.serve.client` (the stdlib thin client everything
+  downstream — CI, benchmarks, the campaign CLI's ``--server`` mode —
+  talks through).  Start one with ``python -m repro.serve``; see
+  ``docs/serving.md``.
+* **decode-loop workloads** — :mod:`repro.serve.decode`'s batched
+  autoregressive serving step (requires jax).
+
+Imports are lazy (PEP 562): the daemon and client are stdlib-weight and
+must import without jax; pulling ``greedy_decode`` & co. loads jax only
+then.
+"""
+from __future__ import annotations
+
+_DECODE = ("ServeResult", "greedy_decode", "make_serve_step")
+_SERVER = ("PredictionService", "PredictionServer")
+_CLIENT = ("ServeClient", "ServeError", "write_campaign_artifacts")
+
+__all__ = [*_DECODE, *_SERVER, *_CLIENT]
+
+
+def __getattr__(name: str):
+    if name in _DECODE:
+        from . import decode
+        return getattr(decode, name)
+    if name in _SERVER:
+        from . import server
+        return getattr(server, name)
+    if name in _CLIENT:
+        from . import client
+        return getattr(client, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

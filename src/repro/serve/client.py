@@ -1,0 +1,208 @@
+"""Thin stdlib client for the ``repro.serve`` prediction daemon.
+
+Everything downstream of the daemon — the CI serve job, the campaign
+CLI's ``--server`` mode, benchmarks, notebook what-ifs — talks through
+:class:`ServeClient` so the wire format lives in exactly one place.
+urllib only; no new dependencies.
+
+Connection errors at *connect* time (daemon still booting, socket not
+yet listening) are retried with bounded exponential backoff — nothing
+has reached the server yet, so the retry is always safe.  HTTP-level
+errors are never retried; they surface as :class:`ServeError` with the
+daemon's status code and error payload.
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+
+__all__ = ["ServeClient", "ServeError", "CampaignStream",
+           "write_campaign_artifacts"]
+
+
+class ServeError(RuntimeError):
+    """A request the daemon rejected (or a dead daemon).
+
+    ``status`` is the HTTP status (0 when no response arrived at all);
+    ``payload`` is the decoded JSON error body when there was one.
+    """
+
+    def __init__(self, message: str, *, status: int = 0,
+                 payload: dict | None = None):
+        super().__init__(message)
+        self.status = status
+        self.payload = payload or {}
+
+
+class CampaignStream:
+    """An in-flight streamed campaign: iterate rows as the daemon emits
+    them; ``summary`` is populated once the stream's final line arrives
+    (iterating to exhaustion guarantees it).  A mid-stream server error
+    surfaces as :class:`ServeError` from the iterator."""
+
+    def __init__(self, resp):
+        self._resp = resp
+        self.summary: dict | None = None
+
+    def __iter__(self):
+        with self._resp:
+            for raw in self._resp:
+                line = raw.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                event = obj.get("event")
+                if event == "summary":
+                    self.summary = obj["summary"]
+                elif event == "error":
+                    raise ServeError(obj.get("error", "campaign failed"),
+                                     status=500, payload=obj)
+                else:
+                    yield obj
+
+    def collect(self) -> tuple[list[dict], dict | None]:
+        """Drain the stream; returns (rows, summary)."""
+        rows = list(self)
+        return rows, self.summary
+
+
+class ServeClient:
+    """Client for one daemon URL (e.g. ``http://127.0.0.1:8733``)."""
+
+    def __init__(self, url: str, *, timeout_s: float = 120.0,
+                 connect_retries: int = 5, backoff_s: float = 0.1):
+        self.url = url.rstrip("/")
+        self.timeout_s = timeout_s
+        self.connect_retries = connect_retries
+        self.backoff_s = backoff_s
+
+    # ----------------------------- transport -----------------------------
+
+    def _request(self, method: str, path: str, body: dict | None = None,
+                 *, stream: bool = False):
+        data = None if body is None else json.dumps(body).encode()
+        headers = {"Content-Type": "application/json"} if data else {}
+        last: Exception | None = None
+        for attempt in range(self.connect_retries + 1):
+            req = urllib.request.Request(self.url + path, data=data,
+                                         headers=headers, method=method)
+            try:
+                resp = urllib.request.urlopen(req, timeout=self.timeout_s)
+                return resp if stream else json.loads(resp.read())
+            except urllib.error.HTTPError as e:
+                try:
+                    payload = json.loads(e.read())
+                except (ValueError, OSError):
+                    payload = {}
+                raise ServeError(
+                    payload.get("error", f"HTTP {e.code} on {path}"),
+                    status=e.code, payload=payload) from e
+            except urllib.error.URLError as e:
+                # retry only failures to *connect* — the request never
+                # reached the daemon, so a retry cannot double-execute
+                last = e
+                if not isinstance(e.reason, ConnectionRefusedError):
+                    break
+                if attempt < self.connect_retries:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        raise ServeError(f"cannot reach daemon at {self.url}: {last}",
+                         status=0) from last
+
+    # ----------------------------- endpoints -----------------------------
+
+    def healthz(self) -> dict:
+        return self._request("GET", "/healthz")
+
+    def stats(self) -> dict:
+        return self._request("GET", "/stats")
+
+    def wait_ready(self, timeout_s: float = 30.0,
+                   poll_s: float = 0.1) -> dict:
+        """Block until the daemon answers ``/healthz`` (boot race helper
+        for scripts that just spawned it)."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                return self.healthz()
+            except ServeError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(poll_s)
+
+    def predict(self, workload, *, system: str = "a100",
+                estimator="roofline", topology="auto",
+                slicer: str = "linear", fidelity: str | None = None,
+                overlap: bool = False, straggler_factor: float = 1.0,
+                compression: float = 1.0) -> dict:
+        """One grid point; returns the result row.  ``workload`` is a
+        preloaded name or a workload-spec dict carrying its own source;
+        ``estimator``/``topology`` are kind names or spec dicts."""
+        body = {"workload": workload, "system": system,
+                "estimator": estimator, "topology": topology,
+                "slicer": slicer, "overlap": overlap,
+                "straggler_factor": straggler_factor,
+                "compression": compression}
+        if fidelity:
+            body["fidelity"] = fidelity
+        return self._request("POST", "/predict", body)
+
+    def campaign(self, *, spec: dict | None = None,
+                 spec_path: str | None = None, executor: str = "thread",
+                 schedule: str = "locality",
+                 max_workers: int | None = None) -> CampaignStream:
+        """Run a campaign on the daemon; returns a :class:`CampaignStream`
+        yielding result rows as jobs finish.  ``spec`` is an inline
+        campaign dict; ``spec_path`` a spec file path *on the daemon's
+        filesystem* (they are localhost peers)."""
+        body: dict = {"executor": executor, "schedule": schedule}
+        if spec is not None:
+            body["spec"] = spec
+        if spec_path is not None:
+            body["spec_path"] = spec_path
+        if max_workers is not None:
+            body["max_workers"] = max_workers
+        resp = self._request("POST", "/campaign", body, stream=True)
+        return CampaignStream(resp)
+
+    def report(self, spec_path: str, *, check: bool = False,
+               tolerance: float | None = None, executor: str = "thread",
+               rows: list[dict] | None = None) -> dict:
+        """Campaign + evaluation report (optionally golden-checked) in
+        one round trip."""
+        body: dict = {"spec_path": spec_path, "executor": executor}
+        if check:
+            body["check"] = True
+        if tolerance is not None:
+            body["tolerance"] = tolerance
+        if rows is not None:
+            body["rows"] = rows
+        return self._request("POST", "/report", body)
+
+    def shutdown(self) -> dict:
+        """Ask the daemon to drain and stop (graceful, like SIGTERM)."""
+        return self._request("POST", "/shutdown", {})
+
+
+def write_campaign_artifacts(rows: list[dict], summary: dict | None,
+                             out_dir: str) -> dict[str, str]:
+    """Materialize a streamed campaign into the exact artifact set a
+    local ``run_campaign(out_dir=...)`` writes — ``results.jsonl``,
+    ``results.csv``, ``summary.json`` — so downstream tooling (``report
+    --results``, the CI golden diff) cannot tell a served campaign from
+    a local one.  Returns the written paths."""
+    import os
+
+    from ..campaign.runner import _write_csv
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {"jsonl": os.path.join(out_dir, "results.jsonl"),
+             "csv": os.path.join(out_dir, "results.csv"),
+             "summary": os.path.join(out_dir, "summary.json")}
+    with open(paths["jsonl"], "w") as f:
+        for row in rows:
+            f.write(json.dumps(row) + "\n")
+    _write_csv(rows, paths["csv"])
+    with open(paths["summary"], "w") as f:
+        json.dump(summary or {}, f, indent=2)
+    return paths

@@ -1,0 +1,585 @@
+"""Prediction-as-a-service: a warm, long-lived HTTP daemon.
+
+Every prediction in this repo used to pay full process startup — Python
+imports, re-parsing IR, re-warming the (H, C, R) cache — per query.
+This module keeps all of that resident instead: one
+:class:`repro.api.Session` is constructed at boot and its warm state —
+the :class:`~repro.campaign.plans.PlanStore` of parsed workloads and
+:class:`~repro.core.pipeline.PredictionPlan`s, and the shared
+:class:`~repro.core.estimators.cache.PersistentCache` — serves every
+request for the life of the process.  Everything downstream (CI, the
+campaign CLI's ``--server`` mode, benchmarks, what-if search) becomes a
+thin client of one warm session.
+
+Transport is localhost HTTP on the stdlib ``ThreadingHTTPServer`` — no
+new runtime dependencies.  Endpoints (see ``docs/serving.md``):
+
+* ``GET  /healthz`` — liveness + drain state;
+* ``GET  /stats``   — requests served, coalescing and duplicate-cold-miss
+  accounting, plans resident, cache store counters;
+* ``POST /predict`` — one grid point, JSON in / result row out;
+* ``POST /campaign``— a campaign spec, result rows streamed back as
+  JSONL while jobs finish, terminated by a summary line;
+* ``POST /report``  — campaign + evaluation report (MAPE, rank
+  preservation, optional golden check) in one round trip;
+* ``POST /shutdown``— graceful drain (same as SIGTERM).
+
+**Request coalescing.**  Concurrent ``/predict`` requests whose jobs
+share an exact (H, C, R) cache keyset (same
+:meth:`~repro.campaign.spec.JobSpec.cache_group`) are coalesced the way
+the campaign scheduler chains jobs: the first request is the chain
+leader and evaluates; followers wait on the leader's completion event
+and then evaluate against the now-warm shared store — pure cache hits.
+A burst of identical what-if queries therefore triggers exactly one
+cold miss per region, which ``/stats`` proves via
+``duplicate_cold_misses`` (total predict misses minus distinct keys
+evaluated; 0 unless coalescing broke).
+
+**Graceful drain.**  SIGTERM (or ``POST /shutdown``) stops admission —
+new work gets 503 — waits for in-flight requests (a mid-flight campaign
+streams to completion), then stops the listener.
+"""
+from __future__ import annotations
+
+import json
+import signal
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import urlsplit
+
+from ..campaign.spec import (SLICER_NAMES, CampaignSpec, EstimatorSpec,
+                             JobSpec, TopologySpec, WorkloadSpec)
+
+DEFAULT_PORT = 8733
+
+#: WorkloadSpec keys that name an IR source (anything else is a knob)
+_SOURCE_KEYS = ("stablehlo_path", "hlo_path", "arch", "gemm")
+
+
+class ServiceError(ValueError):
+    """A request the service rejects, carrying its HTTP status."""
+    status = 500
+
+
+class BadRequest(ServiceError):
+    status = 400
+
+
+class PredictionService:
+    """The transport-independent core: one warm session + coalescing.
+
+    Owns the :class:`repro.api.Session` (scoped registries, shared
+    (H, C, R) store), the session's warm plan store, request/coalescing
+    accounting, and the request handlers the HTTP layer dispatches to.
+    Thread-safe: the HTTP server calls into one instance from many
+    handler threads.
+    """
+
+    def __init__(self, session=None, *, cache_path: str | None = None,
+                 systems: tuple | list = (),
+                 coalesce_timeout_s: float = 300.0):
+        from .. import api
+        from ..campaign.runner import _Registries
+        self.session = session or api.Session(systems=systems,
+                                              cache_path=cache_path)
+        self.plans = self.session.plan_store
+        self.coalesce_timeout_s = coalesce_timeout_s
+        self.draining = False
+        self._t0 = time.time()
+        self._mono0 = time.monotonic()
+        self._lock = threading.Lock()
+        self._inflight_groups: dict[tuple, threading.Event] = {}
+        self._requests: dict[str, int] = {}
+        self._predict = {"served": 0, "coalesced": 0, "cache_hits": 0,
+                         "cache_misses": 0}
+        self._campaign = {"served": 0, "rows": 0, "cache_hits": 0,
+                          "cache_misses": 0, "duplicate_cold_misses": 0}
+        self._evaluated_keys: set[str] = set()
+        #: name -> WorkloadSpec it was materialized from (identity memo:
+        #: an unchanged re-registration skips the rebuild entirely)
+        self._sources: dict[str, WorkloadSpec] = {}
+        self._regs = _Registries(
+            estimators=self.session.estimators,
+            topologies=self.session.topologies,
+            systems=self.session.systems)
+
+    # ----------------------------- boot-time -----------------------------
+
+    def preload(self, spec_path: str) -> dict:
+        """Parse + plan every workload a campaign/suite spec references,
+        so the spec's first request hits fully warm plans.  Returns a
+        small report (workloads added, plans built)."""
+        from ..campaign.__main__ import load_specs
+        from ..campaign.runner import _workload_texts
+        added, planned = [], 0
+        for _, spec in load_specs(spec_path, session=self.session):
+            texts = _workload_texts(spec, None)
+            self.plans.add_texts(texts)
+            for w in spec.workloads:
+                self._sources[w.name] = w
+                added.append(w.name)
+            for job in spec.expand():
+                key = self.plans.key_for(job)
+                if key not in self.plans.plans:
+                    self.plans.get(*key)
+                    planned += 1
+        return {"spec": spec_path, "workloads": added,
+                "plans_built": planned}
+
+    # ---------------------------- request body ----------------------------
+
+    def _count(self, endpoint: str) -> None:
+        with self._lock:
+            self._requests[endpoint] = self._requests.get(endpoint, 0) + 1
+
+    def _resolve_workload(self, w) -> str:
+        """Materialize/locate the request's workload; returns its name."""
+        from ..campaign.builders import build_workload
+        if isinstance(w, str):
+            name, wspec = w, None
+        elif isinstance(w, dict):
+            if "name" not in w:
+                raise BadRequest("workload object needs a 'name'")
+            name = str(w["name"])
+            if any(k in w for k in _SOURCE_KEYS):
+                try:
+                    wspec = WorkloadSpec.from_dict(w)
+                    wspec.validate()
+                except (TypeError, ValueError) as e:
+                    raise BadRequest(f"bad workload spec: {e}") from e
+            else:
+                wspec = None
+        else:
+            raise BadRequest("'workload' must be a name or a "
+                             "workload-spec object")
+        if wspec is not None:
+            if self._sources.get(name) != wspec:
+                built = build_workload(wspec)
+                self.plans.add_texts({name: {
+                    "raw": built.stablehlo_text,
+                    "optimized": built.hlo_text}})
+                with self._lock:
+                    self._sources[name] = wspec
+        elif name not in self.plans.texts:
+            raise BadRequest(
+                f"unknown workload {name!r}: preload it at boot or "
+                "include a source (stablehlo_path/hlo_path/arch/gemm)")
+        return name
+
+    def _job_from_body(self, body: dict) -> JobSpec:
+        """One fully validated grid point from a ``/predict`` body."""
+        if "workload" not in body:
+            raise BadRequest("predict request needs a 'workload'")
+        name = self._resolve_workload(body["workload"])
+
+        e = body.get("estimator", "roofline")
+        try:
+            espec = (EstimatorSpec(kind=e) if isinstance(e, str)
+                     else EstimatorSpec.from_dict(dict(e)))
+        except (TypeError, ValueError) as e_:
+            raise BadRequest(f"bad estimator spec: {e_}") from e_
+        if espec.kind not in self.session.estimators:
+            raise BadRequest(self.session.estimators.unknown_message(
+                espec.kind))
+
+        t = body.get("topology", "auto")
+        try:
+            tspec = (TopologySpec(kind=t) if isinstance(t, str)
+                     else TopologySpec.from_dict(dict(t)))
+        except (TypeError, ValueError) as e_:
+            raise BadRequest(f"bad topology spec: {e_}") from e_
+        if tspec.kind not in self.session.topologies:
+            raise BadRequest(self.session.topologies.unknown_message(
+                tspec.kind))
+
+        system = str(body.get("system", "a100"))
+        if system not in self.session.systems:
+            raise BadRequest(self.session.systems.unknown_message(system))
+
+        slicer = str(body.get("slicer", "linear"))
+        if slicer not in SLICER_NAMES:
+            raise BadRequest(f"unknown slicer {slicer!r}; "
+                             f"have {SLICER_NAMES}")
+
+        source = self._sources.get(name)
+        fidelity = (body.get("fidelity") or espec.fidelity
+                    or (source.fidelity if source else None) or "optimized")
+        try:
+            return JobSpec(
+                job_id=0, workload=name, fidelity=str(fidelity),
+                system=system, estimator=espec, slicer=slicer,
+                topology=tspec, overlap=bool(body.get("overlap", False)),
+                straggler_factor=float(body.get("straggler_factor", 1.0)),
+                compression=float(body.get("compression", 1.0)))
+        except (TypeError, ValueError) as e_:
+            raise BadRequest(f"bad knob value: {e_}") from e_
+
+    # ------------------------------ handlers ------------------------------
+
+    def healthz(self) -> dict:
+        self._count("healthz")
+        return {"status": "draining" if self.draining else "ok",
+                "uptime_s": round(time.monotonic() - self._mono0, 3),
+                "started_unix": self._t0}
+
+    def stats(self) -> dict:
+        self._count("stats")
+        with self._lock:
+            predict = dict(self._predict)
+            predict["distinct_keys_evaluated"] = len(self._evaluated_keys)
+            predict["duplicate_cold_misses"] = (
+                predict["cache_misses"] - len(self._evaluated_keys))
+            campaign = dict(self._campaign)
+            requests = dict(self._requests)
+        return {
+            "uptime_s": round(time.monotonic() - self._mono0, 3),
+            "draining": self.draining,
+            "requests": requests,
+            "predict": predict,
+            "campaign": campaign,
+            "plans": {
+                "resident": len(self.plans.plans),
+                "workloads": len(self.plans.texts),
+                "parse_calls": self.plans.parse_count,
+                "plans_built": self.plans.plans_built,
+            },
+            "cache": self.session.cache_store.stats_dict(),
+        }
+
+    def predict(self, body: dict) -> dict:
+        """One grid point against the warm store, coalesced with any
+        concurrent request sharing its (H, C, R) cache keyset."""
+        from ..campaign.runner import _execute
+        self._count("predict")
+        job = self._job_from_body(body)
+        try:
+            key = self.plans.key_for(job)
+            plan = self.plans.get(*key)
+        except (KeyError, ValueError) as e:
+            raise BadRequest(f"cannot plan workload "
+                             f"{job.workload!r}: {e}") from e
+        group = job.cache_group(self.plans.fingerprint_set(key))
+
+        with self._lock:
+            leader_evt = self._inflight_groups.get(group)
+            if leader_evt is None:
+                leader_evt = threading.Event()
+                self._inflight_groups[group] = leader_evt
+                is_leader = True
+            else:
+                is_leader = False
+                self._predict["coalesced"] += 1
+        if not is_leader:
+            # chain-follower: by the time the leader finishes, every
+            # (H, C, R) key this job needs is in the shared store
+            leader_evt.wait(self.coalesce_timeout_s)
+        try:
+            row, new = _execute(job, plan, self.session.cache_store,
+                                self._regs)
+        finally:
+            if is_leader:
+                with self._lock:
+                    if self._inflight_groups.get(group) is leader_evt:
+                        del self._inflight_groups[group]
+                leader_evt.set()
+        with self._lock:
+            self._predict["served"] += 1
+            self._predict["cache_hits"] += row.get("cache_hits", 0)
+            self._predict["cache_misses"] += row.get("cache_misses", 0)
+            self._evaluated_keys.update(new)
+        row["coalesced"] = not is_leader
+        return row
+
+    def campaign_spec(self, body: dict) -> tuple[CampaignSpec, dict]:
+        """Validate a ``/campaign`` body up front (so transport errors
+        can still be clean 4xx JSON, not mid-stream noise); returns the
+        spec plus runner options."""
+        from ..campaign.runner import EXECUTORS, SCHEDULES
+        if ("spec" in body) == ("spec_path" in body):
+            raise BadRequest(
+                "campaign request needs exactly one of 'spec' "
+                "(inline campaign dict) or 'spec_path' (server-side "
+                "spec file)")
+        try:
+            if "spec_path" in body:
+                spec = CampaignSpec.from_json(str(body["spec_path"]),
+                                              session=self.session)
+            else:
+                spec = CampaignSpec.from_dict(dict(body["spec"]),
+                                              session=self.session)
+        except OSError as e:
+            raise BadRequest(f"cannot read spec: {e}") from e
+        except (TypeError, ValueError, KeyError) as e:
+            raise BadRequest(f"bad campaign spec: {e}") from e
+        opts = {
+            "executor": str(body.get("executor", "thread")),
+            "schedule": str(body.get("schedule", "locality")),
+            "max_workers": body.get("max_workers"),
+        }
+        if opts["executor"] not in EXECUTORS:
+            raise BadRequest(f"executor {opts['executor']!r} "
+                             f"not in {EXECUTORS}")
+        if opts["schedule"] not in SCHEDULES:
+            raise BadRequest(f"schedule {opts['schedule']!r} "
+                             f"not in {SCHEDULES}")
+        return spec, opts
+
+    def run_campaign(self, spec: CampaignSpec, opts: dict, on_row=None):
+        """Execute a validated campaign against the warm session state;
+        returns the :class:`~repro.campaign.runner.CampaignResult`."""
+        from ..campaign.runner import run_campaign
+        for w in spec.workloads:
+            self._sources.setdefault(w.name, w)
+        result = run_campaign(
+            spec, executor=opts.get("executor", "thread"),
+            max_workers=opts.get("max_workers"),
+            schedule=opts.get("schedule", "locality"),
+            cache=self.session.cache_store,
+            cache_path=self.session.cache_path,
+            plan_store=self.plans, on_row=on_row, session=self.session)
+        with self._lock:
+            self._campaign["served"] += 1
+            self._campaign["rows"] += len(result.rows)
+            self._campaign["cache_hits"] += result.cache["hits"]
+            self._campaign["cache_misses"] += result.cache["misses"]
+            # misses are evaluations; new_entries are distinct new keys —
+            # any excess is a duplicated cold evaluation (the scheduler
+            # keeps this 0 within a run)
+            self._campaign["duplicate_cold_misses"] += max(
+                0, result.cache["misses"] - result.cache["new_entries"])
+        return result
+
+    def campaign(self, body: dict, on_row=None):
+        self._count("campaign")
+        spec, opts = self.campaign_spec(body)
+        return self.run_campaign(spec, opts, on_row=on_row)
+
+    def report(self, body: dict) -> dict:
+        """Campaign + evaluation report in one request: run the spec (or
+        take ``rows``), score MAPE/rank preservation against the recorded
+        references, optionally gate against the golden snapshot."""
+        from ..campaign.report import (DEFAULT_TOLERANCE, build_report,
+                                       check_rows, golden_path, load_json,
+                                       reference_path)
+        self._count("report")
+        spec_path = body.get("spec_path")
+        if not spec_path:
+            raise BadRequest("report request needs 'spec_path' (golden "
+                             "and reference files derive from it)")
+        spec, opts = self.campaign_spec(
+            {k: v for k, v in body.items() if k != "rows"})
+        rows = body.get("rows")
+        if rows is None:
+            rows = self.run_campaign(spec, opts).rows
+        reference = load_json(reference_path(spec_path, spec.name))
+        report = build_report(spec.name, rows, reference=reference)
+        if body.get("check"):
+            golden = load_json(golden_path(spec_path, spec.name))
+            if golden is None:
+                report["golden_check"] = {
+                    "failures": [f"{spec.name}: no golden snapshot at "
+                                 f"{golden_path(spec_path, spec.name)}"],
+                    "rows_checked": 0, "tolerance": DEFAULT_TOLERANCE}
+            else:
+                report["golden_check"] = check_rows(
+                    golden, rows, tolerance=body.get("tolerance"))
+        return report
+
+
+class PredictionServer:
+    """The HTTP front end: admission control, drain, request dispatch.
+
+    ``port=0`` binds an ephemeral port (tests); :attr:`url` is the
+    bound address either way.
+    """
+
+    def __init__(self, service: PredictionService, *,
+                 host: str = "127.0.0.1", port: int = DEFAULT_PORT,
+                 drain_timeout_s: float = 60.0, verbose: bool = False):
+        self.service = service
+        self.drain_timeout_s = drain_timeout_s
+        self.verbose = verbose
+        self._cv = threading.Condition()
+        self._inflight = 0
+        self._thread: threading.Thread | None = None
+        self.stopped = threading.Event()
+        self.httpd = ThreadingHTTPServer((host, port), _make_handler(self))
+        self.httpd.daemon_threads = True
+
+    @property
+    def url(self) -> str:
+        host, port = self.httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    # ---------------------------- lifecycle ----------------------------
+
+    def start(self) -> "PredictionServer":
+        """Serve on a background thread (tests, benchmarks)."""
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, kwargs={"poll_interval": 0.05},
+            name="repro-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Serve on the calling thread (the CLI) until drained."""
+        try:
+            self.httpd.serve_forever(poll_interval=0.2)
+        finally:
+            self.stopped.set()
+
+    def install_signal_handlers(self) -> None:
+        """SIGTERM/SIGINT -> graceful drain (CLI main thread only)."""
+        def _drain(signum, frame):  # noqa: ARG001
+            threading.Thread(target=self.drain, daemon=True,
+                             name="repro-serve-drain").start()
+        signal.signal(signal.SIGTERM, _drain)
+        signal.signal(signal.SIGINT, _drain)
+
+    def drain(self, timeout_s: float | None = None) -> bool:
+        """Graceful shutdown: refuse new work (503), wait for in-flight
+        requests up to ``timeout_s``, stop the listener.  Returns True
+        when everything in flight completed before the deadline."""
+        timeout_s = self.drain_timeout_s if timeout_s is None else timeout_s
+        with self._cv:
+            self.service.draining = True
+            clean = self._cv.wait_for(lambda: self._inflight == 0,
+                                      timeout=timeout_s)
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        self.stopped.set()
+        return clean
+
+    # ------------------------- admission control -------------------------
+
+    def request_started(self) -> bool:
+        with self._cv:
+            if self.service.draining:
+                return False
+            self._inflight += 1
+            return True
+
+    def request_finished(self) -> None:
+        with self._cv:
+            self._inflight -= 1
+            self._cv.notify_all()
+
+
+def _make_handler(server: PredictionServer):
+    service = server.service
+
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+        server_version = "repro-serve/0.1"
+
+        def log_message(self, fmt, *args):  # noqa: A003
+            if server.verbose:
+                BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+        # ------------------------- plumbing -------------------------
+
+        def _json(self, status: int, obj: dict, *,
+                  close: bool = False) -> None:
+            payload = (json.dumps(obj) + "\n").encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(payload)))
+            if close:
+                self.send_header("Connection", "close")
+                self.close_connection = True
+            self.end_headers()
+            self.wfile.write(payload)
+
+        def _body(self) -> dict:
+            n = self.headers.get("Content-Length")
+            if n is None:
+                raise BadRequest("missing Content-Length")
+            raw = self.rfile.read(int(n))
+            if not raw:
+                return {}
+            try:
+                obj = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise BadRequest(f"invalid JSON body: {e}") from e
+            if not isinstance(obj, dict):
+                raise BadRequest("request body must be a JSON object")
+            return obj
+
+        # ------------------------- dispatch -------------------------
+
+        def do_GET(self):  # noqa: N802
+            path = urlsplit(self.path).path
+            # health/stats stay readable while draining — monitors need
+            # to watch the drain happen
+            if path == "/healthz":
+                self._json(200, service.healthz())
+            elif path == "/stats":
+                self._json(200, service.stats())
+            elif path in ("/predict", "/campaign", "/report", "/shutdown"):
+                self._json(405, {"error": f"{path} takes POST, not GET"})
+            else:
+                self._json(404, {"error": f"no such endpoint {path!r}"})
+
+        def do_POST(self):  # noqa: N802
+            path = urlsplit(self.path).path
+            if path == "/shutdown":
+                service._count("shutdown")
+                threading.Thread(target=server.drain, daemon=True,
+                                 name="repro-serve-drain").start()
+                self._json(200, {"draining": True}, close=True)
+                return
+            if not server.request_started():
+                self._json(503, {"error": "draining: server is "
+                                          "shutting down"}, close=True)
+                return
+            try:
+                if path == "/predict":
+                    self._json(200, service.predict(self._body()))
+                elif path == "/campaign":
+                    self._campaign_stream(self._body())
+                elif path == "/report":
+                    self._json(200, service.report(self._body()))
+                else:
+                    self._json(404, {"error": f"no such endpoint {path!r}"})
+            except ServiceError as e:
+                self._json(e.status, {"error": str(e)})
+            except (TypeError, ValueError, KeyError) as e:
+                self._json(400, {"error": f"{type(e).__name__}: {e}"})
+            except BrokenPipeError:
+                self.close_connection = True
+            except Exception as e:  # noqa: BLE001 — the daemon must live
+                self._json(500, {"error": f"{type(e).__name__}: {e}"})
+            finally:
+                server.request_finished()
+
+        def _campaign_stream(self, body: dict) -> None:
+            """Validate, then stream result rows as JSONL while the
+            campaign runs, final line = the summary.  The response has
+            no Content-Length and closes the connection (clients read
+            to EOF)."""
+            service._count("campaign")
+            spec, opts = service.campaign_spec(body)  # 4xx before headers
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-ndjson")
+            self.send_header("Connection", "close")
+            self.close_connection = True
+            self.end_headers()
+            wlock = threading.Lock()
+
+            def on_row(row: dict) -> None:
+                line = (json.dumps(row) + "\n").encode()
+                with wlock:
+                    self.wfile.write(line)
+                    self.wfile.flush()
+
+            try:
+                result = service.run_campaign(spec, opts, on_row=on_row)
+                final = {"event": "summary", "summary": result.summary}
+            except Exception as e:  # noqa: BLE001 — headers already sent
+                final = {"event": "error",
+                         "error": f"{type(e).__name__}: {e}"}
+            with wlock:
+                self.wfile.write((json.dumps(final) + "\n").encode())
+
+    return Handler

@@ -278,7 +278,14 @@ class TestTableEstimator:
                         {"kind": "table", "options": {"path": path}}]))
         assert res.summary["num_failed"] == 0
         by_est = {r["estimator"]: r["step_time_s"] for r in res.ok_rows}
-        assert by_est["table"] == pytest.approx(by_est["roofline"])
+        # the profile path is a non-builtin option, so the row label
+        # carries its digest (two tables with different profiles must
+        # not alias to one label)
+        from repro.campaign.spec import EstimatorSpec
+        label = EstimatorSpec.from_dict(
+            {"kind": "table", "options": {"path": path}}).label
+        assert label.startswith("table-")
+        assert by_est[label] == pytest.approx(by_est["roofline"])
 
     def test_table_scale_and_default(self, tmp_path):
         from repro.core.estimators import TableEstimator

@@ -54,6 +54,45 @@ class TestGridExpansion:
         assert ("roofline", "optimized") in fids
         assert ("roofline-per-op-ovh@raw", "raw") in fids
 
+    def test_custom_option_labels_never_alias(self):
+        """Two estimator entries of one (possibly plugin) kind that
+        differ only in non-builtin options must get distinct labels —
+        aliasing would silently merge their rows in every label-keyed
+        consumer (summaries, reports, golden snapshots)."""
+        from repro.campaign.spec import EstimatorSpec
+        a = EstimatorSpec.from_dict(
+            {"kind": "table", "options": {"path": "profiles/a100.json"}})
+        b = EstimatorSpec.from_dict(
+            {"kind": "table", "options": {"path": "profiles/h100.json"}})
+        same_as_a = EstimatorSpec.from_dict(
+            {"kind": "table", "options": {"path": "profiles/a100.json"}})
+        assert a.label != b.label
+        assert a.label == same_as_a.label          # stable digest
+        assert a.label.startswith("table-")
+        # builtin options keep their historical readable labels — golden
+        # snapshots key rows on these exact strings
+        assert EstimatorSpec.from_dict(
+            {"kind": "roofline",
+             "options": {"mode": "per-op",
+                         "include_overheads": True}}).label \
+            == "roofline-per-op-ovh"
+        assert EstimatorSpec.from_dict(
+            {"kind": "systolic",
+             "options": {"preset": "onnxim"}}).label == "systolic-onnxim"
+        assert EstimatorSpec.from_dict(
+            {"kind": "profiling", "options": {"runs": 3}}).label \
+            == "profiling-runs3"
+        # mixed: builtin bits stay readable, extras still disambiguate
+        m1 = EstimatorSpec.from_dict(
+            {"kind": "systolic",
+             "options": {"preset": "onnxim", "lanes": 4}})
+        m2 = EstimatorSpec.from_dict(
+            {"kind": "systolic",
+             "options": {"preset": "onnxim", "lanes": 8}})
+        assert m1.label != m2.label
+        assert all(lbl.startswith("systolic-onnxim-")
+                   for lbl in (m1.label, m2.label))
+
     def test_knob_axes_expand(self):
         spec = CampaignSpec.from_dict(_spec_dict(
             overlap=[False, True], straggler_factor=[1.0, 2.0]))
@@ -647,7 +686,10 @@ class TestCLI:
         every checked-in spec (incl. the paper_full suite) validates and
         expands without Python glue."""
         import glob
-        specs = sorted(glob.glob(os.path.join(REPO, "specs", "*.json")))
+        # bench_baselines.json is tools/bench_check.py data, not a grid
+        specs = [s for s in sorted(glob.glob(
+                     os.path.join(REPO, "specs", "*.json")))
+                 if not s.endswith("bench_baselines.json")]
         assert any(s.endswith("paper_full.json") for s in specs)
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src")

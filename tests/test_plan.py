@@ -86,6 +86,50 @@ class TestPlanReuse:
         assert plan.fidelity == "raw"
         assert store.get("w", "raw", "linear") is plan
 
+    def test_add_texts_keeps_identical_names_hot(self):
+        """A long-lived store (the serve daemon, a multi-campaign
+        session): re-registering a name with identical texts must keep
+        its parsed program and plans — that is the whole warm-reuse
+        point."""
+        texts = {"w": {"raw": _stacked_text([(64, 64, 64)]),
+                       "optimized": None}}
+        store = PlanStore(texts)
+        plan = store.get("w", "raw", "linear")
+        store.add_texts({"w": dict(texts["w"])})
+        assert store.get("w", "raw", "linear") is plan
+        assert store.parse_count == 1 and store.plans_built == 1
+
+    def test_add_texts_invalidates_changed_names(self):
+        """Binding a name to different text must drop everything cached
+        under it — a reused workload name can never serve a stale plan."""
+        store = PlanStore({"w": {"raw": _stacked_text([(64, 64, 64)]),
+                                 "optimized": None},
+                           "keep": {"raw": _stacked_text([(48, 48, 48)]),
+                                    "optimized": None}})
+        old = store.get("w", "raw", "linear")
+        kept = store.get("keep", "raw", "linear")
+        old_fp = store.fingerprint_set(("w", "raw", "linear"))
+        store.add_texts({"w": {"raw": _stacked_text([(96, 96, 96)]),
+                               "optimized": None}})
+        new = store.get("w", "raw", "linear")
+        assert new is not old
+        assert store.fingerprint_set(("w", "raw", "linear")) != old_fp
+        assert store.get("keep", "raw", "linear") is kept  # untouched
+        assert store.parse_count == 3
+
+    def test_add_texts_is_how_warm_campaigns_share_plans(self):
+        """run_campaign(plan_store=...) twice over one warm store: the
+        second run parses and slices nothing."""
+        store = PlanStore()
+        res1 = run_campaign(_gemm_spec(), plan_store=store)
+        res2 = run_campaign(_gemm_spec(), plan_store=store)
+        assert res1.plans["parse_calls"] == 2
+        assert res2.plans["parse_calls"] == 0
+        assert res2.plans["plans_built"] == 0
+        assert res2.summary["num_ok"] == 16
+        assert [r["step_time_s"] for r in res2.rows] == \
+            [r["step_time_s"] for r in res1.rows]
+
     def test_plan_files_round_trip_workers(self, tmp_path):
         """The process-worker path: plans cross the boundary as pickled
         files keyed by plan key — no workload text involved."""

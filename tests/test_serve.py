@@ -1,0 +1,407 @@
+"""Prediction-as-a-service: the warm daemon, its client, and the
+properties CI leans on — request coalescing under a thread burst (one
+cold miss, /stats proves zero duplicates), graceful drain mid-campaign,
+stats accounting, bounded client retry on connection-refused, and clean
+4xx mapping for malformed requests."""
+import json
+import os
+import socket
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from repro.serve.client import (CampaignStream, ServeClient, ServeError,
+                                write_campaign_artifacts)
+from repro.serve.server import (BadRequest, PredictionServer,
+                                PredictionService)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIG10 = os.path.join(REPO, "specs", "fig10_gemm.json")
+
+ONNXIM = {"kind": "systolic", "options": {"preset": "onnxim"}}
+
+
+def gemm_workload(n: int, name: str | None = None) -> dict:
+    return {"name": name or f"gemm-{n}", "fidelity": "raw",
+            "gemm": {"m": n, "n": n, "k": n, "dtype": "bf16"}}
+
+
+@pytest.fixture()
+def served():
+    """A live daemon on an ephemeral port + its client; drained after."""
+    service = PredictionService()
+    server = PredictionServer(service, port=0).start()
+    client = ServeClient(server.url, connect_retries=0)
+    yield service, server, client
+    if not server.stopped.is_set():
+        server.drain(timeout_s=10.0)
+    assert server.stopped.is_set()
+
+
+class TestEndpoints:
+    def test_healthz_and_stats_shape(self, served):
+        _, _, client = served
+        h = client.healthz()
+        assert h["status"] == "ok" and h["uptime_s"] >= 0
+        st = client.stats()
+        assert st["predict"]["served"] == 0
+        assert st["plans"] == {"resident": 0, "workloads": 0,
+                               "parse_calls": 0, "plans_built": 0}
+        assert st["cache"]["entries"] == 0
+
+    def test_predict_matches_local_session(self, served):
+        _, _, client = served
+        row = client.predict(gemm_workload(512), system="tpu-v3",
+                             estimator=ONNXIM)
+        from repro import api
+        from repro.campaign.builders import build_workload
+        from repro.campaign.spec import WorkloadSpec
+        session = api.Session()
+        w = build_workload(WorkloadSpec.from_dict(gemm_workload(512)))
+        local = session.predict(w, system="tpu-v3", estimator="systolic",
+                                options={"preset": "onnxim"},
+                                fidelity="raw")
+        assert row["step_time_s"] == pytest.approx(
+            local.to_row()["step_time_s"], rel=0, abs=0)
+        assert row["coalesced"] is False
+        assert row["fidelity"] == "raw"
+
+    def test_preload_makes_requests_parse_free(self, served):
+        service, _, client = served
+        info = service.preload(FIG10)
+        assert len(info["workloads"]) == 6 and info["plans_built"] == 6
+        parse0 = client.stats()["plans"]["parse_calls"]
+        client.predict("gemm-256", system="tpu-v3", estimator=ONNXIM)
+        assert client.stats()["plans"]["parse_calls"] == parse0
+
+    def test_campaign_stream_rows_match_golden(self, served):
+        _, _, client = served
+        rows, summary = client.campaign(spec_path=FIG10,
+                                        executor="thread").collect()
+        assert len(rows) == 24 and summary["num_failed"] == 0
+        from repro.campaign.report import check_rows, golden_path, load_json
+        golden = load_json(golden_path(FIG10, "fig10-gemm"))
+        assert golden is not None
+        assert check_rows(golden, rows)["failures"] == []
+
+    def test_warm_second_campaign_is_pure_hits(self, served):
+        _, _, client = served
+        _, s1 = client.campaign(spec_path=FIG10).collect()
+        _, s2 = client.campaign(spec_path=FIG10).collect()
+        assert s1["cache"]["misses"] == 24
+        assert s2["cache"]["misses"] == 0
+        assert s2["cache"]["hits"] == 24
+        assert s2["plans"]["parse_calls"] == 0
+
+    def test_report_endpoint_with_golden_check(self, served):
+        _, _, client = served
+        rep = client.report(FIG10, check=True)
+        assert rep["golden_check"]["failures"] == []
+        assert rep["golden_check"]["rows_checked"] == 24
+
+    def test_inline_campaign_spec(self, served):
+        _, _, client = served
+        spec = {"name": "inline", "workloads": [gemm_workload(256)],
+                "systems": ["a100"], "slicers": ["linear"]}
+        rows, summary = client.campaign(spec=spec).collect()
+        assert len(rows) == 1 and "step_time_s" in rows[0]
+
+    def test_workload_reregistration_invalidates_stale_plan(self, served):
+        _, _, client = served
+        r1 = client.predict(gemm_workload(256, name="w"), system="a100")
+        r2 = client.predict(gemm_workload(512, name="w"), system="a100")
+        assert r1["step_time_s"] != r2["step_time_s"]
+        # identical re-registration keeps plans hot (no new parse)
+        parse0 = client.stats()["plans"]["parse_calls"]
+        client.predict(gemm_workload(512, name="w"), system="a100")
+        assert client.stats()["plans"]["parse_calls"] == parse0
+
+
+class TestMalformedRequests:
+    @pytest.mark.parametrize("body,fragment", [
+        ({}, "needs a 'workload'"),
+        ({"workload": "ghost"}, "unknown workload"),
+        ({"workload": {"gemm": {"m": 1, "n": 1, "k": 1}}}, "needs a 'name'"),
+        ({"workload": 42}, "must be a name or a workload-spec"),
+        ({"workload": {"name": "x", "gemm": {"m": 1, "n": 1, "k": 1},
+                       "arch": "llama3-1b"}}, "bad workload spec"),
+        ({"workload": gemm_workload(64), "system": "a1000"},
+         "unknown system"),
+        ({"workload": gemm_workload(64), "estimator": "warp-drive"},
+         "unknown estimator"),
+        ({"workload": gemm_workload(64), "slicer": "diagonal"},
+         "unknown slicer"),
+        ({"workload": gemm_workload(64),
+          "estimator": {"kind": "roofline", "bogus_field": 1}},
+         "bad estimator spec"),
+    ])
+    def test_predict_4xx(self, served, body, fragment):
+        _, server, _ = served
+        req = urllib.request.Request(
+            server.url + "/predict", data=json.dumps(body).encode(),
+            headers={"Content-Type": "application/json"}, method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 400
+        assert fragment in json.loads(ei.value.read())["error"]
+
+    def test_invalid_json_body_is_400(self, served):
+        _, server, _ = served
+        req = urllib.request.Request(
+            server.url + "/predict", data=b"{not json",
+            headers={"Content-Type": "application/json"}, method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req)
+        assert ei.value.code == 400
+        assert "invalid JSON" in json.loads(ei.value.read())["error"]
+
+    def test_unknown_endpoint_404_and_wrong_method_405(self, served):
+        _, server, client = served
+        with pytest.raises(ServeError) as ei:
+            client._request("POST", "/teleport", {})
+        assert ei.value.status == 404
+        with pytest.raises(urllib.error.HTTPError) as ei2:
+            urllib.request.urlopen(server.url + "/predict")
+        assert ei2.value.code == 405
+
+    def test_campaign_needs_exactly_one_spec_source(self, served):
+        _, _, client = served
+        with pytest.raises(ServeError) as ei:
+            client._request("POST", "/campaign", {"executor": "thread"})
+        assert ei.value.status == 400
+        assert "exactly one of" in str(ei.value)
+
+    def test_service_error_carries_status(self):
+        assert BadRequest("x").status == 400
+        assert isinstance(BadRequest("x"), ValueError)
+
+
+class TestCoalescing:
+    def test_burst_coalesces_to_one_cold_miss(self, served, monkeypatch):
+        """A thread burst on one cold (H, C, R) keyset: exactly one
+        request evaluates (the chain leader); the rest wait on it and
+        resolve as pure hits.  The evaluation is artificially slowed so
+        every burst member genuinely arrives while the leader is in
+        flight — making the coalesced count deterministic, not just the
+        miss count."""
+        service, _, client = served
+        from repro.campaign import runner as runner_mod
+        real_execute = runner_mod._execute
+        started = threading.Event()
+
+        def slow_execute(job, plan, store, regs=None):
+            started.set()
+            time.sleep(0.3)
+            return real_execute(job, plan, store, regs)
+
+        # server.py binds runner._execute lazily inside predict(), so
+        # patching the runner module intercepts the daemon's calls
+        monkeypatch.setattr(runner_mod, "_execute", slow_execute)
+        rows, errs = [], []
+
+        def hit():
+            try:
+                rows.append(client.predict(gemm_workload(640),
+                                           system="tpu-v3",
+                                           estimator=ONNXIM))
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        leader = threading.Thread(target=hit)
+        leader.start()
+        assert started.wait(5.0)          # burst lands mid-evaluation
+        burst = [threading.Thread(target=hit) for _ in range(5)]
+        for t in burst:
+            t.start()
+        for t in [leader, *burst]:
+            t.join()
+
+        assert not errs, errs
+        st = client.stats()["predict"]
+        assert st["served"] == 6
+        assert st["cache_misses"] == 1
+        assert st["cache_hits"] == 5
+        assert st["duplicate_cold_misses"] == 0
+        assert st["coalesced"] == 5
+        assert sum(1 for r in rows if r["coalesced"]) == 5
+        assert len({r["step_time_s"] for r in rows}) == 1
+
+    def test_distinct_keysets_do_not_coalesce(self, served):
+        _, _, client = served
+        a = client.predict(gemm_workload(320), system="a100")
+        b = client.predict(gemm_workload(320), system="h100")
+        assert a["coalesced"] is False and b["coalesced"] is False
+        st = client.stats()["predict"]
+        assert st["cache_misses"] == 2
+        assert st["duplicate_cold_misses"] == 0
+
+
+class TestDrain:
+    def test_drain_rejects_new_work_and_finishes_inflight(self, served,
+                                                          monkeypatch):
+        """SIGTERM semantics: a campaign caught mid-flight streams to
+        completion; work submitted after the drain starts gets 503."""
+        service, server, client = served
+        from repro.campaign import runner as runner_mod
+        real_execute = runner_mod._execute
+        first_row = threading.Event()
+
+        def slow_execute(job, plan, store, regs=None):
+            first_row.set()
+            time.sleep(0.1)
+            return real_execute(job, plan, store, regs)
+
+        monkeypatch.setattr(runner_mod, "_execute", slow_execute)
+        spec = {"name": "drain-t",
+                "workloads": [gemm_workload(256), gemm_workload(384),
+                              gemm_workload(448)],
+                "systems": ["a100"], "slicers": ["linear"]}
+        result: dict = {}
+
+        def run():
+            rows, summary = client.campaign(spec=spec,
+                                            executor="serial").collect()
+            result["rows"], result["summary"] = rows, summary
+
+        t = threading.Thread(target=run)
+        t.start()
+        assert first_row.wait(5.0)
+        drained = threading.Thread(
+            target=lambda: server.drain(timeout_s=30.0))
+        drained.start()
+        time.sleep(0.05)                  # let admission flip to draining
+        with pytest.raises(ServeError) as ei:
+            client.predict(gemm_workload(256), system="a100")
+        assert ei.value.status in (503, 0)  # 503, or listener already gone
+        t.join(timeout=30)
+        drained.join(timeout=30)
+        assert result["summary"]["num_failed"] == 0
+        assert len(result["rows"]) == 3   # mid-flight campaign completed
+        assert server.stopped.is_set()
+
+    def test_shutdown_endpoint_drains(self, served):
+        _, server, client = served
+        assert client.shutdown() == {"draining": True}
+        assert server.stopped.wait(10.0)
+
+    def test_healthz_reports_draining(self):
+        service = PredictionService()
+        server = PredictionServer(service, port=0).start()
+        client = ServeClient(server.url, connect_retries=0)
+        service.draining = True           # drain flag only; listener up
+        assert client.healthz()["status"] == "draining"
+        assert client.stats()["draining"] is True
+        service.draining = False
+        server.drain(timeout_s=5.0)
+
+
+class TestClient:
+    def test_retry_on_connection_refused_bounded_backoff(self):
+        """The client retries ONLY connect-refused (daemon still
+        booting), with bounded exponential backoff, then gives up with
+        status 0."""
+        with socket.socket() as s:        # reserve a port nothing serves
+            s.bind(("127.0.0.1", 0))
+            port = s.getsockname()[1]
+        client = ServeClient(f"http://127.0.0.1:{port}",
+                             connect_retries=3, backoff_s=0.01)
+        t0 = time.monotonic()
+        with pytest.raises(ServeError) as ei:
+            client.healthz()
+        waited = time.monotonic() - t0
+        assert ei.value.status == 0
+        # 0.01 + 0.02 + 0.04 of backoff, and no unbounded spinning
+        assert 0.07 <= waited < 5.0
+
+    def test_wait_ready_rides_out_late_boot(self):
+        service = PredictionService()
+        server = PredictionServer(service, port=0)
+        url = server.url
+        threading.Thread(target=lambda: (time.sleep(0.3), server.start()),
+                         daemon=True).start()
+        client = ServeClient(url, connect_retries=0)
+        assert client.wait_ready(timeout_s=10.0)["status"] == "ok"
+        server.drain(timeout_s=5.0)
+
+    def test_http_error_is_not_retried(self, served):
+        _, _, client = served
+        client.connect_retries = 50       # would take seconds if retried
+        t0 = time.monotonic()
+        with pytest.raises(ServeError) as ei:
+            client.predict("ghost")
+        assert ei.value.status == 400
+        assert time.monotonic() - t0 < 2.0
+
+    def test_write_campaign_artifacts_roundtrip(self, served, tmp_path):
+        _, _, client = served
+        rows, summary = client.campaign(spec_path=FIG10).collect()
+        paths = write_campaign_artifacts(rows, summary, str(tmp_path))
+        from repro.campaign.runner import load_jsonl
+        assert load_jsonl(paths["jsonl"]) == rows
+        with open(paths["summary"]) as f:
+            assert json.load(f)["num_failed"] == 0
+        with open(paths["csv"]) as f:
+            assert f.readline().startswith("job_id,")
+
+    def test_campaign_stream_surfaces_midstream_error(self):
+        class FakeResp:
+            lines = [b'{"job_id": 0}\n',
+                     b'{"event": "error", "error": "boom"}\n']
+
+            def __iter__(self):
+                return iter(self.lines)
+
+            def __enter__(self):
+                return self
+
+            def __exit__(self, *a):
+                return False
+
+        stream = CampaignStream(FakeResp())
+        it = iter(stream)
+        assert next(it) == {"job_id": 0}
+        with pytest.raises(ServeError, match="boom"):
+            next(it)
+
+
+class TestStatsAccounting:
+    def test_counters_add_up_across_mixed_traffic(self, served):
+        service, _, client = served
+        service.preload(FIG10)
+        client.predict("gemm-256", system="tpu-v3", estimator=ONNXIM)
+        client.predict("gemm-256", system="tpu-v3", estimator=ONNXIM)
+        client.campaign(spec_path=FIG10).collect()
+        client.report(FIG10, check=True)
+        st = client.stats()
+        assert st["requests"]["predict"] == 2
+        assert st["requests"]["campaign"] == 1
+        assert st["requests"]["report"] == 1
+        assert st["predict"]["served"] == 2
+        assert st["predict"]["cache_misses"] == 1   # second was a hit
+        assert st["predict"]["cache_hits"] == 1
+        assert st["predict"]["duplicate_cold_misses"] == 0
+        # campaign verb ran twice (once inside /report)
+        assert st["campaign"]["served"] == 2
+        assert st["campaign"]["rows"] == 48
+        assert st["campaign"]["duplicate_cold_misses"] == 0
+        assert st["plans"]["resident"] == 6
+        assert st["cache"]["entries"] == 24
+        assert st["uptime_s"] > 0
+
+    def test_lazy_serve_package_imports_without_jax(self):
+        """The daemon/client half of repro.serve must not pull in the
+        decode half's jax dependency (PEP 562 laziness)."""
+        import subprocess
+        import sys
+        code = ("import sys\n"
+                "from repro.serve import ServeClient, PredictionService\n"
+                "assert 'jax' not in sys.modules, 'serve imported jax'\n"
+                "from repro.serve import client, server\n"
+                "assert 'jax' not in sys.modules\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, cwd=REPO)
+        assert proc.returncode == 0, proc.stderr

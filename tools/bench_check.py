@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate over *deterministic* counters.
+
+The ``BENCH_*.json`` perf-trajectory artifacts mix two kinds of numbers:
+wall-clock timings (machine-dependent, useless as CI gates) and
+deterministic work counters — parse calls, plans built, cache misses,
+lock round-trips, duplicate cold misses — that depend only on the code.
+This gate compares ONLY the counters, against the expectations recorded
+in ``specs/bench_baselines.json``::
+
+    python tools/bench_check.py                     # all baselined files
+    python tools/bench_check.py BENCH_serve.json    # just one
+
+Baseline format — one entry per bench file, mapping a dotted path into
+the report to exactly one constraint::
+
+    {"BENCH_campaign.json": {
+        "executors.serial.parse_calls": {"max": 5},
+        "grid.jobs":                    {"equals": 80},
+        "parse_call_ratio":             {"min": 16.0}}}
+
+``equals`` pins structural counters (grid shape, miss counts) so silent
+changes need a deliberate baseline update; ``max`` bounds work that must
+not grow back (parses, lock round-trips); ``min`` floors amortization
+ratios.  Exit 1 on any violated constraint or missing counter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(REPO, "specs", "bench_baselines.json")
+
+_OPS = ("equals", "min", "max")
+
+
+def resolve(report: dict, dotted: str):
+    """Walk a dotted path through nested dicts; KeyError when absent."""
+    cur = report
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return cur
+
+
+def check_value(value, constraint: dict) -> str | None:
+    """None when the constraint holds, else the failure description."""
+    ops = [k for k in constraint if k in _OPS]
+    if len(ops) != 1:
+        return f"baseline entry must have exactly one of {_OPS}, " \
+               f"got {sorted(constraint)}"
+    op = ops[0]
+    bound = constraint[op]
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        return f"counter is {value!r}, not a number"
+    if op == "equals" and value != bound:
+        return f"{value} != {bound}"
+    if op == "min" and value < bound:
+        return f"{value} < min {bound}"
+    if op == "max" and value > bound:
+        return f"{value} > max {bound}"
+    return None
+
+
+def check_file(bench_path: str, constraints: dict) -> list[str]:
+    """All failures for one bench report (missing file is a failure:
+    a gate that silently skips is not a gate)."""
+    name = os.path.basename(bench_path)
+    if not os.path.exists(bench_path):
+        return [f"{name}: report not found at {bench_path} — run the "
+                "benchmark first"]
+    with open(bench_path) as f:
+        report = json.load(f)
+    failures = []
+    for dotted, constraint in sorted(constraints.items()):
+        try:
+            value = resolve(report, dotted)
+        except KeyError:
+            failures.append(f"{name}: counter {dotted!r} missing from "
+                            "report")
+            continue
+        err = check_value(value, constraint)
+        if err:
+            failures.append(f"{name}: {dotted}: {err}")
+        else:
+            op = next(k for k in constraint if k in _OPS)
+            print(f"  ok {name}: {dotted} = {value} "
+                  f"({op} {constraint[op]})")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate BENCH_*.json deterministic counters against "
+                    "specs/bench_baselines.json.")
+    ap.add_argument("bench", nargs="*",
+                    help="bench report files to check (default: every "
+                         "file named in the baselines)")
+    ap.add_argument("--baselines", default=BASELINES,
+                    help="baseline expectations file")
+    args = ap.parse_args(argv)
+
+    with open(args.baselines) as f:
+        baselines = {k: v for k, v in json.load(f).items()
+                     if not k.startswith("_")}
+
+    if args.bench:
+        targets = {}
+        for path in args.bench:
+            key = os.path.basename(path)
+            if key not in baselines:
+                print(f"bench_check: no baselines recorded for {key} "
+                      f"(have {sorted(baselines)})")
+                return 2
+            targets[path] = baselines[key]
+    else:
+        targets = {os.path.join(REPO, name): cons
+                   for name, cons in baselines.items()}
+
+    failures: list[str] = []
+    for path, constraints in sorted(targets.items()):
+        failures.extend(check_file(path, constraints))
+    for fail in failures:
+        print(f"BENCH REGRESSION: {fail}")
+    n = sum(len(c) for c in targets.values())
+    print(f"bench_check: {n} counter(s) across {len(targets)} report(s), "
+          f"{len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

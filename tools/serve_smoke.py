@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""CI smoke for prediction-as-a-service: CI as the daemon's first
+production client.
+
+Boots a real ``python -m repro.serve`` daemon subprocess (ephemeral
+port, Fig 10 GEMM spec preloaded), then drives it the way CI means it
+to be used:
+
+  1. a *coalesced duplicate-request pair* — two concurrent identical
+     predictions on a workload the daemon has never costed; ``/stats``
+     must show exactly one cold miss between them and
+     ``duplicate_cold_misses == 0``;
+  2. replays ``specs/fig10_gemm.json`` through the HTTP client and
+     diffs the streamed rows against the checked-in golden snapshot
+     (``specs/golden/``) at the snapshot's own tolerance;
+  3. the ``/report`` endpoint's golden check must agree;
+  4. graceful shutdown via ``/shutdown``, daemon exits 0.
+
+Exit 1 on any deviation.  Run from the repo root::
+
+    PYTHONPATH=src python tools/serve_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPEC = os.path.join(REPO, "specs", "fig10_gemm.json")
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.campaign.report import check_rows, golden_path, load_json  # noqa: E402
+from repro.serve.client import ServeClient  # noqa: E402
+
+POINT = dict(system="tpu-v3",
+             estimator={"kind": "systolic", "options": {"preset": "onnxim"}})
+
+
+def fail(msg: str) -> None:
+    print(f"SERVE-SMOKE FAILURE: {msg}")
+    raise SystemExit(1)
+
+
+def coalesced_pair(client: ServeClient) -> None:
+    """Two concurrent identical cold requests -> one cold miss, zero
+    duplicates."""
+    workload = {"name": "smoke-pair", "fidelity": "raw",
+                "gemm": {"m": 3000, "n": 3000, "k": 3000, "dtype": "bf16"}}
+    before = client.stats()["predict"]
+    rows, errs = [], []
+
+    def hit():
+        try:
+            rows.append(client.predict(workload, **POINT))
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    pair = [threading.Thread(target=hit) for _ in range(2)]
+    for t in pair:
+        t.start()
+    for t in pair:
+        t.join()
+    if errs:
+        fail(f"duplicate-pair request errored: {errs}")
+    after = client.stats()["predict"]
+    pair_misses = after["cache_misses"] - before["cache_misses"]
+    if pair_misses != 1:
+        fail(f"duplicate pair recorded {pair_misses} cold misses, "
+             "expected exactly 1 (coalescing broken)")
+    if after["duplicate_cold_misses"] != 0:
+        fail(f"/stats duplicate_cold_misses = "
+             f"{after['duplicate_cold_misses']}, expected 0")
+    if rows[0]["step_time_s"] != rows[1]["step_time_s"]:
+        fail("coalesced pair disagreed on the prediction")
+    print(f"  coalesced pair: 1 cold miss, 0 duplicates, "
+          f"{after['coalesced'] - before['coalesced']} request(s) waited "
+          "on the leader")
+
+
+def golden_replay(client: ServeClient) -> None:
+    """Stream the Fig 10 campaign over HTTP; rows must match the golden
+    snapshot bit-for-bit within its tolerance."""
+    rows, summary = client.campaign(spec_path=SPEC,
+                                    executor="thread").collect()
+    if summary is None or summary.get("num_failed", 1) != 0:
+        fail(f"served campaign failed: {summary}")
+    golden = load_json(golden_path(SPEC, summary["campaign"]))
+    if golden is None:
+        fail(f"no golden snapshot for {summary['campaign']}")
+    check = check_rows(golden, rows)
+    if check["failures"]:
+        for f in check["failures"]:
+            print(f"  golden diff: {f}")
+        fail(f"{len(check['failures'])} streamed row(s) deviate from "
+             "the golden snapshot")
+    print(f"  golden replay: {check['rows_checked']} rows match "
+          f"(tolerance {check['tolerance']})")
+
+
+def report_endpoint(client: ServeClient) -> None:
+    rep = client.report(SPEC, check=True)
+    failures = rep.get("golden_check", {}).get("failures", ["no check"])
+    if failures:
+        fail(f"/report golden check failed: {failures}")
+    print(f"  /report: golden OK over "
+          f"{rep['golden_check']['rows_checked']} rows, "
+          f"MAPE table built for {rep['num_ok']} predictions")
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    daemon = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve", "--port", "0",
+         "--preload", SPEC],
+        cwd=REPO, env=env, stdout=subprocess.PIPE, text=True)
+    try:
+        boot = daemon.stdout.readline()
+        url = json.loads(boot)["url"]
+        print(f"daemon up at {url} (pid {daemon.pid})")
+        client = ServeClient(url)
+        client.wait_ready(timeout_s=30.0)
+
+        coalesced_pair(client)
+        golden_replay(client)
+        report_endpoint(client)
+
+        st = client.stats()
+        if st["predict"]["duplicate_cold_misses"] != 0:
+            fail("final /stats shows predict duplicate cold misses")
+        if st["campaign"]["duplicate_cold_misses"] != 0:
+            fail("final /stats shows campaign duplicate cold misses")
+        print(f"  /stats: {st['requests']} · plans resident "
+              f"{st['plans']['resident']} · cache entries "
+              f"{st['cache']['entries']}")
+
+        client.shutdown()
+        rc = daemon.wait(timeout=30)
+        if rc != 0:
+            fail(f"daemon exited {rc} after graceful shutdown")
+        print("serve smoke: all checks passed")
+        return 0
+    finally:
+        if daemon.poll() is None:
+            daemon.terminate()
+            try:
+                daemon.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                daemon.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
