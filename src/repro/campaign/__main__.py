@@ -241,8 +241,12 @@ def _report_command(args, session=None) -> int:
                  f"min τ {rp['min_kendall_tau']}")
         check_tag = ""
         if "golden_check" in report:
-            n_fail = len(report["golden_check"]["failures"])
-            check_tag = (" · golden OK" if not n_fail
+            gc = report["golden_check"]
+            n_fail = len(gc["failures"])
+            drift = gc.get("max_drift")
+            drift_tag = ("" if drift is None
+                         else f", max drift {drift:.1e}")
+            check_tag = (f" · golden OK{drift_tag}" if not n_fail
                          else f" · golden FAILED ({n_fail})")
         print(f"report {name!r}: {report['num_ok']}/{report['num_rows']} "
               f"rows · {trend}{check_tag}")

@@ -9,6 +9,9 @@ analytical path consistently optimistic relative to hardware.
 """
 from __future__ import annotations
 
+import numpy as np
+
+from ..ir.arrays import RegionArrays
 from ..ir.opcost import op_cost
 from ..registry import register_estimator
 from ..slicing.regions import ComputeRegion
@@ -69,3 +72,38 @@ class RooflineEstimator(ComputeEstimator):
                 t += sysm.kernel_overhead_s
             total += t
         return total
+
+    def evaluate_batch(self, arrays: RegionArrays) -> list[float]:
+        """All regions of a plan in a handful of vectorized expressions.
+
+        Bit-identical to calling :meth:`get_run_time_estimate` per region:
+        every value is the same float64 operation sequence — numpy's
+        elementwise divide/maximum are IEEE double ops, the overhead add
+        happens after the max exactly as the scalar path orders it, and
+        per-op mode sums each region's op latencies left-to-right in
+        Python (``sum`` over a numpy slice would not preserve the scalar
+        loop's associativity).  In per-op mode the overhead lands only on
+        active ops via the precomputed 0/1 mask (``t + 0.0 == t`` for the
+        non-negative latencies involved)."""
+        sysm = self.system
+        peak = np.array([sysm.flops_for(dt) for dt in arrays.dtype_table],
+                        dtype=np.float64)
+        if self.mode == "region":
+            t = np.maximum(arrays.flops / peak[arrays.dtype_idx],
+                           arrays.boundary_bytes / sysm.mem_bw)
+            if self.include_overheads:
+                t = t + sysm.kernel_overhead_s
+            return t.tolist()
+        op_t = np.maximum(arrays.op_flops / peak[arrays.op_dtype_idx],
+                          arrays.op_bytes / sysm.mem_bw)
+        if self.include_overheads:
+            op_t = op_t + arrays.op_active * sysm.kernel_overhead_s
+        vals = op_t.tolist()
+        offs = arrays.op_offsets.tolist()
+        out = []
+        for r in range(arrays.num_regions):
+            total = 0.0
+            for v in vals[offs[r]:offs[r + 1]]:
+                total += v
+            out.append(total)
+        return out

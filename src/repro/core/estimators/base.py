@@ -39,15 +39,26 @@ class ComputeEstimator(abc.ABC):
     def get_run_time_estimate(self, region: ComputeRegion) -> float:
         """Estimated latency of one execution of the region, in seconds."""
 
-    def get_run_time_estimates(self,
-                               regions: list[ComputeRegion]) -> list[float]:
+    def get_run_time_estimates(self, regions: list[ComputeRegion],
+                               arrays=None) -> list[float]:
         """Batched form of :meth:`get_run_time_estimate`.
 
         The evaluate phase hands every compute region of a plan over in
         one call; plain estimators just loop, while
         :class:`~repro.core.estimators.cache.CachedEstimator` overrides
         this to fetch all cached latencies in a single store round-trip.
+
+        ``arrays`` is the plan's precomputed
+        :class:`~repro.core.ir.arrays.RegionArrays` for the same regions
+        in the same order.  Estimators that implement
+        ``evaluate_batch(arrays)`` (a vectorized pass producing values
+        bit-identical to the per-region method) are dispatched through
+        it; everything else ignores ``arrays`` and loops.
         """
+        if arrays is not None:
+            batch = getattr(self, "evaluate_batch", None)
+            if batch is not None:
+                return batch(arrays)
         return [self.get_run_time_estimate(r) for r in regions]
 
     def get_compile_args(self) -> dict:

@@ -2,7 +2,10 @@
 from .collectives import CommSpec, collect_collectives, comm_spec, total_collective_bytes
 from .graph import COLLECTIVE_OPS, OpNode, Program, dependency_edges
 from .opcost import Cost, op_cost, program_cost
+from .arrays import ProgramArrays, RegionArrays, build_program_arrays, build_region_arrays
+from .diff import assert_programs_equal, program_diff
 from .parser import parse, parse_hlo, parse_stablehlo
+from .streaming import parse_hlo_streaming, parse_stablehlo_streaming
 from .types import DTYPE_BYTES, TensorType
 
 __all__ = [
@@ -10,5 +13,9 @@ __all__ = [
     "COLLECTIVE_OPS", "OpNode", "Program", "dependency_edges",
     "Cost", "op_cost", "program_cost",
     "parse", "parse_hlo", "parse_stablehlo",
+    "parse_hlo_streaming", "parse_stablehlo_streaming",
+    "program_diff", "assert_programs_equal",
+    "ProgramArrays", "RegionArrays",
+    "build_program_arrays", "build_region_arrays",
     "DTYPE_BYTES", "TensorType",
 ]

@@ -24,7 +24,9 @@ from .types import TensorType, hlo_types_in, mlir_types_in, parse_mlir_tensor
 # shared helpers
 # ---------------------------------------------------------------------------
 
-_COMMENT_RE = re.compile(r"/\*.*?\*/")
+# DOTALL: block comments may span lines (jax metadata dumps do); without it
+# a multi-line /* ... */ survives stripping and corrupts the next op line
+_COMMENT_RE = re.compile(r"/\*.*?\*/", re.DOTALL)
 _SSA_RE = re.compile(r"%[\w.\-#]+")
 
 # HLO opcode -> normalized mnemonic
@@ -52,11 +54,32 @@ def _strip_comments(text: str) -> str:
 
 
 def _parse_replica_groups(text: str) -> tuple[int, int] | None:
-    """Return (num_groups, group_size) from either textual form.
+    """Return ``(num_groups, group_size)`` from any textual form.
 
-    HLO iota form:      replica_groups=[2,4]<=[8]
-    HLO explicit form:  replica_groups={{0,1,2,3},{4,5,6,7}}
-    MLIR dense form:    replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>
+    Accepted grammar (all three forms the XLA/StableHLO printers emit),
+    tried in this order — first match wins:
+
+    1. HLO iota form — no whitespace tolerated (matches the printer)::
+
+           replica_groups=[G,S]<=[N]            ->  (G, S)
+
+    2. HLO explicit form — groups are ``{...}`` lists of device ids;
+       whitespace is tolerated *between* groups but not around the
+       ``replica_groups=`` key; the group size is taken from the first
+       group (XLA emits uniform groups), empty first group counts as 1::
+
+           replica_groups={{0,1,2,3},{4,5,6,7}} ->  (2, 4)
+
+    3. MLIR dense form — whitespace tolerated around ``=`` and ``:``;
+       the shape is read from the ``tensor<GxSxi64>`` type, not the
+       elements; a ``tensor<0x0xi64>`` (empty groups) yields None::
+
+           replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>
+                                                 ->  (2, 2)
+
+    Text with none of these (or a malformed variant) yields None — the
+    op is then modeled without a group split.  Comments never reach this
+    function: both front ends strip ``/* ... */`` before line handling.
     """
     m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", text)
     if m:
@@ -468,13 +491,36 @@ class _HloParser:
 # public API
 # ---------------------------------------------------------------------------
 
-def parse_stablehlo(text: str) -> Program:
+#: which front end :func:`parse`/:func:`parse_stablehlo`/:func:`parse_hlo`
+#: use when no explicit ``frontend=`` is given.  ``"streaming"`` is the
+#: single-pass tokenizer front end (:mod:`repro.core.ir.streaming`);
+#: ``"legacy"`` is the multi-pass regex parser in this module, kept as the
+#: independent reference implementation for the differential test harness
+#: (tests/test_parser_diff.py asserts node-for-node Program equality).
+DEFAULT_FRONTEND = "streaming"
+
+
+def _resolve_frontend(frontend: str | None) -> str:
+    fe = frontend or DEFAULT_FRONTEND
+    if fe not in ("streaming", "legacy"):
+        raise ValueError(f"unknown parser frontend {fe!r} "
+                         "(expected 'streaming' or 'legacy')")
+    return fe
+
+
+def parse_stablehlo(text: str, frontend: str | None = None) -> Program:
     """Parse StableHLO-MLIR text (``lowered.as_text()``)."""
+    if _resolve_frontend(frontend) == "streaming":
+        from .streaming import parse_stablehlo_streaming
+        return parse_stablehlo_streaming(text)
     return _MlirParser(text).parse()
 
 
-def parse_hlo(text: str) -> Program:
+def parse_hlo(text: str, frontend: str | None = None) -> Program:
     """Parse (optimized, possibly SPMD-partitioned) HLO text."""
+    if _resolve_frontend(frontend) == "streaming":
+        from .streaming import parse_hlo_streaming
+        return parse_hlo_streaming(text)
     return _HloParser(text).parse()
 
 
@@ -485,11 +531,11 @@ def parse_hlo(text: str) -> Program:
 PARSE_CALLS = 0
 
 
-def parse(text: str) -> Program:
+def parse(text: str, frontend: str | None = None) -> Program:
     """Auto-detect dialect."""
     global PARSE_CALLS
     PARSE_CALLS += 1
     head = text[:4096]
     if "HloModule" in head:
-        return parse_hlo(text)
-    return parse_stablehlo(text)
+        return parse_hlo(text, frontend=frontend)
+    return parse_stablehlo(text, frontend=frontend)

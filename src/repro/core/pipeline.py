@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 
 from .estimators.base import ComputeEstimator
 from .estimators.cache import CachedEstimator, CacheStats
+from .ir.arrays import RegionArrays, build_region_arrays
 from .ir.graph import Program
 from .ir.parser import parse
 from .network.scheduler import ScheduleResult, simulate
@@ -33,6 +34,11 @@ from .slicing.depaware import dependency_aware_split
 from .slicing.linear import linear_split
 from .slicing.regions import Segment
 from .trace.chakra import Trace
+
+#: evaluate phase default: feed plans' precomputed RegionArrays to the
+#: estimator batch API (vectorized where the estimator supports it; the
+#: values are bit-identical either way — see tests/test_campaign_diff.py)
+DEFAULT_VECTORIZE = True
 
 
 @dataclass
@@ -105,6 +111,10 @@ class PredictionPlan:
     program: Program
     segments: list[Segment]
     dep_map: dict[int, set[int]] | None = None
+    #: evaluation-ready array-of-structs view of the COMP regions, in
+    #: segment order (built once at plan time; numpy + interned tables,
+    #: picklable like the rest of the plan)
+    arrays: RegionArrays | None = None
 
     @property
     def key(self) -> tuple[str, str, str]:
@@ -126,17 +136,19 @@ class PredictionPlan:
 def build_plan(program: Program, *, slicer: str = "linear",
                name: str = "workload",
                fidelity: str = "raw") -> PredictionPlan:
-    """Run the plan phase: slice ``program`` once into a reusable plan."""
+    """Run the plan phase: slice ``program`` once into a reusable plan
+    (segments plus the evaluation-ready :class:`RegionArrays`)."""
     if slicer == "linear":
-        return PredictionPlan(name=name, fidelity=fidelity, slicer=slicer,
-                              program=program,
-                              segments=linear_split(program))
-    if slicer in ("dep", "dependency-aware"):
+        segments, dep_map = linear_split(program), None
+    elif slicer in ("dep", "dependency-aware"):
         segments, dep_map = dependency_aware_split(program)
-        return PredictionPlan(name=name, fidelity=fidelity, slicer=slicer,
-                              program=program, segments=segments,
-                              dep_map=dep_map)
-    raise ValueError(f"unknown slicer {slicer!r}")
+    else:
+        raise ValueError(f"unknown slicer {slicer!r}")
+    arrays = build_region_arrays(
+        [s.region for s in segments if s.kind == "COMP"])
+    return PredictionPlan(name=name, fidelity=fidelity, slicer=slicer,
+                          program=program, segments=segments,
+                          dep_map=dep_map, arrays=arrays)
 
 
 @dataclass
@@ -264,6 +276,9 @@ class PredictionJob:
     cache_store: object | None = None   # MutableMapping | PersistentCache
     plan: PredictionPlan | None = None  # prebuilt plan (skips parse/slice)
     batch_cache: bool = True
+    #: None = module default (DEFAULT_VECTORIZE); False forces the scalar
+    #: per-region estimator path (parity testing / benchmarking)
+    vectorize: bool | None = None
     cached: CachedEstimator | None = field(default=None, init=False)
 
     def build_plan(self) -> PredictionPlan:
@@ -283,9 +298,13 @@ class PredictionJob:
                        if self.use_cache else None)
         est = self.cached or self.estimator
 
+        vectorize = (DEFAULT_VECTORIZE if self.vectorize is None
+                     else self.vectorize)
+        arrays = plan.arrays if vectorize else None
         segments = plan.segments
         if self.batch_cache:
-            costed = iter(est.get_run_time_estimates(plan.compute_regions))
+            costed = iter(est.get_run_time_estimates(plan.compute_regions,
+                                                     arrays=arrays))
             durations = [next(costed) if s.kind == "COMP" else 0.0
                          for s in segments]
         else:

@@ -1,0 +1,225 @@
+"""Offset-index sidecar tests for :class:`PersistentCache`.
+
+The sidecar (``<path>.idx``) buys O(1) point lookups into the JSONL
+append log.  These tests pin its safety story: the log is the single
+source of truth (a torn/foreign/stale sidecar is rebuilt, never
+trusted), coherence across two live handles costs no extra lock traffic
+(the log's flock guards both files), and a warm hit touches no disk at
+all — ``scan_bytes`` stays 0, the deterministic counter the bench suite
+asserts.
+"""
+import json
+import os
+
+from repro.core.estimators.cache import PersistentCache
+
+
+def _entries(n, base=0):
+    return {f"k{base + i}": (float(base + i), 0.001) for i in range(n)}
+
+
+class TestIndexBasics:
+    def test_put_many_creates_sidecar(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(8))
+        assert os.path.exists(path + ".idx")
+        with open(path + ".idx") as f:
+            lines = [json.loads(line) for line in f]
+        header, body = lines[0], lines[1:]
+        assert header["schema"] == 2
+        keys = {r["k"] for r in body if "k" in r}
+        assert keys == set(_entries(8))
+        # last line is a coverage marker spanning the whole log
+        assert body[-1]["c"] == os.path.getsize(path)
+
+    def test_index_offsets_point_at_records(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(5))
+        with open(path) as f:
+            for key, off in pc._idx.items():
+                f.seek(off)
+                rec = json.loads(f.readline())
+                assert rec["k"] == key
+
+    def test_append_after_first_batch_extends_index(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(3))
+        pc.put_many(_entries(3, base=10))
+        fresh = PersistentCache(path, lazy=True)
+        assert set(fresh._idx) == set(_entries(3)) | set(_entries(3, base=10))
+
+    def test_stats_dict_exposes_counters(self, tmp_path):
+        pc = PersistentCache(str(tmp_path / "hcr.jsonl"))
+        pc.put_many(_entries(2))
+        d = pc.stats_dict()
+        assert {"scan_bytes", "point_reads", "index_keys"} <= set(d)
+        assert d["index_keys"] == 2
+
+
+class TestPointLookups:
+    def test_lazy_load_reads_no_records(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        PersistentCache(path).put_many(_entries(50))
+        lazy = PersistentCache(path, lazy=True)
+        assert len(lazy.entries) == 0
+        assert lazy.scan_bytes == 0
+        assert len(lazy._idx) == 50
+
+    def test_lazy_get_many_is_point_reads_not_tail(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        PersistentCache(path).put_many(_entries(100))
+        log_size = os.path.getsize(path)
+        lazy = PersistentCache(path, lazy=True)
+        got = lazy.get_many(["k3", "k97"])
+        assert got == {"k3": 3.0, "k97": 97.0}
+        assert lazy.point_reads == 2
+        # read two record lines, not the 100-record log
+        assert 0 < lazy.scan_bytes < log_size / 10
+
+    def test_warm_hit_scan_bytes_zero(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(10))
+        pc.scan_bytes = 0
+        base_locks = pc.lock_roundtrips
+        for _ in range(5):
+            assert pc.get_many(list(_entries(10))) \
+                == {k: v for k, (v, _) in _entries(10).items()}
+        assert pc.scan_bytes == 0          # no disk I/O on warm hits
+        assert pc.point_reads == 0
+        assert pc.lock_roundtrips == base_locks
+
+    def test_absent_key_after_full_sync_takes_no_lock(self, tmp_path):
+        # fully synced + unchanged file: absent in memory == absent on
+        # disk, so even a miss lookup is stat-only
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(3))
+        base = pc.lock_roundtrips
+        assert pc.get_many(["nope"]) == {}
+        assert pc.lock_roundtrips == base
+
+    def test_point_read_one_lock_roundtrip_per_batch(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        PersistentCache(path).put_many(_entries(20))
+        lazy = PersistentCache(path, lazy=True)
+        base = lazy.lock_roundtrips
+        lazy.get_many([f"k{i}" for i in range(20)])
+        assert lazy.lock_roundtrips == base + 1
+
+
+class TestTwoLiveProcesses:
+    def test_writer_then_reader_coherence(self, tmp_path):
+        """A appends, B resolves A's fresh keys by point-read — the
+        mid-campaign coherence story, now without tailing the whole log."""
+        path = str(tmp_path / "hcr.jsonl")
+        a = PersistentCache(path)
+        b = PersistentCache(path)
+        a.put_many(_entries(4))
+        got = b.get_many(["k1", "k3"])
+        assert got == {"k1": 1.0, "k3": 3.0}
+        assert b.point_reads == 2
+        # and the reverse direction: B writes, A point-reads
+        b.put_many(_entries(2, base=50))
+        assert a.get_many(["k51"]) == {"k51": 51.0}
+        assert a.point_reads >= 1
+
+    def test_interleaved_writers_index_stays_complete(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        a = PersistentCache(path)
+        b = PersistentCache(path)
+        a.put_many(_entries(3))
+        b.put_many(_entries(3, base=10))
+        a.put_many(_entries(3, base=20))
+        fresh = PersistentCache(path, lazy=True)
+        want = set(_entries(3)) | set(_entries(3, base=10)) \
+            | set(_entries(3, base=20))
+        assert set(fresh._idx) == want
+        assert fresh.get_many(sorted(want)) \
+            == {k: float(k[1:]) for k in want}
+
+    def test_compaction_invalidates_other_handles_index(self, tmp_path):
+        """save() rewrites the log with a fresh generation; a live handle
+        holding pre-compaction byte offsets must drop them rather than
+        seek into the rewritten file."""
+        path = str(tmp_path / "hcr.jsonl")
+        a = PersistentCache(path)
+        b = PersistentCache(path, lazy=True)
+        a.put_many(_entries(6))
+        b.get_many(["k0"])             # b now holds gen-1 offsets
+        a.save()                       # compaction: fresh gen, new offsets
+        a.put_many(_entries(2, base=30))
+        got = b.get_many(["k31", "k5"])
+        assert got == {"k31": 31.0, "k5": 5.0}
+
+
+class TestCrashRecovery:
+    def test_truncated_sidecar_rebuilt_from_log(self, tmp_path):
+        """A sidecar torn mid-line (crashed writer) loses nothing: the
+        uncovered suffix is tailed on reads, and the next put_many
+        regenerates the index from the log."""
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(10))
+        with open(path + ".idx") as f:
+            full = f.read()
+        with open(path + ".idx", "w") as f:
+            f.write(full[: len(full) // 2])   # torn: no coverage marker
+        fresh = PersistentCache(path, lazy=True)
+        # every key still resolves (index hit or uncovered-suffix tail)
+        assert fresh.get_many(list(_entries(10))) \
+            == {k: v for k, (v, _) in _entries(10).items()}
+        # the next write heals the sidecar completely
+        writer = PersistentCache(path, lazy=True)
+        writer.put_many(_entries(1, base=99))
+        healed = PersistentCache(path, lazy=True)
+        assert set(healed._idx) == set(_entries(10)) | {"k99"}
+
+    def test_deleted_sidecar_rebuilt(self, tmp_path):
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(5))
+        os.unlink(path + ".idx")
+        # reads fall back to tailing the log — nothing lost
+        lazy = PersistentCache(path, lazy=True)
+        assert lazy.get_many(["k2"]) == {"k2": 2.0}
+        # explicit repair
+        n = lazy.rebuild_index()
+        assert n == 5 and os.path.exists(path + ".idx")
+        again = PersistentCache(path, lazy=True)
+        assert again.get_many(["k4"]) == {"k4": 4.0}
+        assert again.point_reads == 1
+
+    def test_foreign_sidecar_never_trusted(self, tmp_path):
+        """A sidecar from another log generation (stale copy, wrong file)
+        must be ignored and replaced, not followed into wrong offsets."""
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(4))
+        with open(path + ".idx", "w") as f:
+            f.write(json.dumps({"schema": 2, "fingerprint": 1,
+                                "gen": "not-the-real-gen"}) + "\n")
+            f.write(json.dumps({"k": "k0", "o": 999999}) + "\n")
+            f.write(json.dumps({"c": 999999}) + "\n")
+        lazy = PersistentCache(path, lazy=True)
+        assert lazy.get_many(list(_entries(4))) \
+            == {k: v for k, (v, _) in _entries(4).items()}
+        writer = PersistentCache(path, lazy=True)
+        writer.put_many(_entries(1, base=77))
+        healed = PersistentCache(path, lazy=True)
+        assert set(healed._idx) == set(_entries(4)) | {"k77"}
+
+    def test_torn_log_tail_still_indexable(self, tmp_path):
+        """A crashed *log* writer leaves a torn last record; rebuild and
+        lookups skip it exactly like the absorb path does."""
+        path = str(tmp_path / "hcr.jsonl")
+        pc = PersistentCache(path)
+        pc.put_many(_entries(3))
+        with open(path, "a") as f:
+            f.write('{"k": "torn')           # no newline, no close quote
+        lazy = PersistentCache(path, lazy=True)
+        assert lazy.get_many(["k1"]) == {"k1": 1.0}
+        assert lazy.rebuild_index() == 3

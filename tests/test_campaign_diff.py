@@ -1,0 +1,85 @@
+"""Differential campaign test: new cold path vs legacy, bit for bit.
+
+PR 7's rewrite (streaming front end + vectorized grid evaluation) is
+behavior-preserving by construction; this suite proves it at the level
+users observe — a real checked-in grid (``specs/fig10_gemm.json``) run
+end-to-end through both paths must produce *bit-identical* result rows,
+wall-clock fields excluded.  The same exactness is wired into
+``report --check``: its golden comparison now reports the observed
+``max_drift`` (expected exactly 0 on the recording machine) alongside
+the tolerance note explaining that the tolerance absorbs cross-platform
+float variance only.
+"""
+import os
+
+import pytest
+
+import repro.core.ir.parser as parser_mod
+import repro.core.pipeline as pipeline_mod
+from repro.campaign import CampaignSpec, run_campaign
+from repro.campaign.report import (check_rows, golden_path, load_json,
+                                   make_golden)
+
+SPEC_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "specs", "fig10_gemm.json")
+
+#: fields that measure the runner, not the prediction — everything else
+#: must match bit for bit between the legacy and vectorized paths
+WALL_FIELDS = {"job_wall_s", "simulation_wall_s",
+               "cache_saved_s", "cache_miss_cost_s"}
+
+
+def _strip(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k not in WALL_FIELDS}
+
+
+def _run_fig10(frontend: str, vectorize: bool) -> list[dict]:
+    mp = pytest.MonkeyPatch()
+    try:
+        mp.setattr(parser_mod, "DEFAULT_FRONTEND", frontend)
+        mp.setattr(pipeline_mod, "DEFAULT_VECTORIZE", vectorize)
+        res = run_campaign(CampaignSpec.from_json(SPEC_PATH),
+                           executor="serial")
+    finally:
+        mp.undo()
+    assert res.summary["num_failed"] == 0, res.summary["failures"]
+    return res.rows
+
+
+@pytest.fixture(scope="module")
+def fig10_rows():
+    return {
+        "legacy": _run_fig10("legacy", vectorize=False),
+        "new": _run_fig10("streaming", vectorize=True),
+    }
+
+
+class TestFig10Differential:
+    def test_rows_bit_identical(self, fig10_rows):
+        legacy, new = fig10_rows["legacy"], fig10_rows["new"]
+        assert len(legacy) == len(new) and len(new) > 0
+        for lr, nr in zip(legacy, new):
+            assert _strip(lr) == _strip(nr)   # == on floats: bit-identity
+
+    def test_wall_fields_present_but_excluded(self, fig10_rows):
+        # the exclusion list must actually name row fields — a renamed
+        # counter would silently widen the bit-identity claim
+        row = fig10_rows["new"][0]
+        assert {"job_wall_s", "simulation_wall_s"} <= set(row)
+
+    def test_new_path_matches_checked_in_golden(self, fig10_rows):
+        """The acceptance bar: the checked-in golden snapshot (recorded
+        pre-rewrite) must pass with zero drift on the new path."""
+        golden = load_json(golden_path(SPEC_PATH, "fig10-gemm"))
+        assert golden is not None, "specs/golden/fig10-gemm.json missing"
+        check = check_rows(golden, fig10_rows["new"])
+        assert check["failures"] == []
+        assert check["rows_checked"] == len(golden["rows"])
+        assert check["max_drift"] == 0.0
+
+    def test_check_rows_reports_tolerance_note(self, fig10_rows):
+        golden = make_golden("fig10_gemm", fig10_rows["legacy"])
+        check = check_rows(golden, fig10_rows["new"])
+        assert check["failures"] == []
+        assert check["max_drift"] == 0.0
+        assert any("bit-identical" in n for n in check.get("notes", []))

@@ -85,6 +85,39 @@ class TestHloParser:
         assert totals["all_reduce"] == pytest.approx(12 * 64 * 64 * 4)
 
 
+class TestCommentStripping:
+    def test_multiline_block_comment(self):
+        # regression: _COMMENT_RE lacked re.DOTALL, so a /* ... */ that
+        # spanned lines survived stripping and corrupted the op stream
+        text = ("module @m {\n"
+                "  /* header comment\n"
+                "     spanning three\n"
+                "     lines */\n"
+                "  func.func public @main(%arg0: tensor<4x4xf32>) "
+                "-> tensor<4x4xf32> {\n"
+                "    %0 = stablehlo.add %arg0, %arg0 : tensor<4x4xf32>\n"
+                "    return %0 : tensor<4x4xf32>\n"
+                "  }\n"
+                "}\n")
+        for frontend in ("legacy", "streaming"):
+            prog = parse_stablehlo(text, frontend=frontend)
+            ops = [op.op for op in prog.walk()]
+            assert ops == ["add"], frontend
+
+    def test_inline_and_multiline_mixed(self):
+        text = ("module @m { /* a */\n"
+                "  func.func public @main(%arg0: tensor<2xf32>) "
+                "-> tensor<2xf32> {\n"
+                "    %0 = stablehlo.negate %arg0 : tensor<2xf32> "
+                "/* trailing\n comment */\n"
+                "    return %0 : tensor<2xf32>\n"
+                "  }\n"
+                "}\n")
+        for frontend in ("legacy", "streaming"):
+            prog = parse_stablehlo(text, frontend=frontend)
+            assert [op.op for op in prog.walk()] == ["negate"], frontend
+
+
 class TestStableHloParser:
     @pytest.fixture(scope="class")
     def export(self):

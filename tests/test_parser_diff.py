@@ -1,0 +1,425 @@
+"""Differential harness: legacy regex front ends vs streaming front ends.
+
+The streaming parsers (:mod:`repro.core.ir.streaming`) exist purely for
+speed — every prediction the pipeline makes must be bit-identical to what
+the legacy parsers (:mod:`repro.core.ir.parser`) produce.  This suite
+enforces node-for-node :class:`Program` equality (everything except uid
+numbering, via :func:`repro.core.ir.assert_programs_equal`) over:
+
+* every checked-in workload text — the fig10 GEMM spec materialized
+  through :func:`build_workload`, the synthetic GEMM / sharded-training
+  stacks, and canned HLO/MLIR modules covering while loops, collectives,
+  and multi-result ops;
+* live jax exports (raw StableHLO-MLIR and compiled post-SPMD HLO) of a
+  scanned+grad model — the texts the paper's figures are built from;
+* randomized well-formed op lines from seeded generators (always run)
+  and hypothesis strategies (when the dev dependency is installed),
+  including whitespace/comment perturbations;
+* the tokenizer round-trip property: joining token lines reproduces the
+  comment-stripped input text.
+
+It also hosts the ``_parse_replica_groups`` equivalence suite: the
+streaming gated helper must agree with the legacy helper on all three
+textual forms (HLO iota, HLO explicit, MLIR dense) and on arbitrary junk.
+"""
+import json
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.campaign.builders import (
+    build_workload,
+    synthesize_gemm_stack,
+    synthesize_sharded_stack,
+)
+from repro.campaign.spec import WorkloadSpec
+from repro.core.ir import assert_programs_equal, program_diff
+from repro.core.ir.parser import (
+    _HloParser,
+    _MlirParser,
+    _parse_replica_groups,
+    parse_hlo,
+    parse_stablehlo,
+)
+from repro.core.ir.streaming import (
+    _replica_groups,
+    parse_hlo_streaming,
+    parse_stablehlo_streaming,
+)
+from repro.core.ir.tokenize import HloTokens, MlirTokens, strip_comments
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="property-based tests need the hypothesis dev dependency "
+           "(pip install -e .[dev])")
+
+
+def both_mlir(text: str):
+    """Parse ``text`` through both MLIR front ends, assert equality."""
+    legacy = _MlirParser(text).parse()
+    streaming = parse_stablehlo_streaming(text)
+    assert_programs_equal(legacy, streaming)
+    return legacy, streaming
+
+
+def both_hlo(text: str):
+    legacy = _HloParser(text).parse()
+    streaming = parse_hlo_streaming(text)
+    assert_programs_equal(legacy, streaming)
+    return legacy, streaming
+
+
+SHAPES = [(256 * (1 + i % 4), 256 * (1 + (i // 4) % 4), 512)
+          for i in range(24)]
+
+CANNED_HLO = """\
+HloModule jit_toy, num_partitions=8
+
+%add.1 (x.2: f32[], y.3: f32[]) -> f32[] {
+  %x.2 = f32[] parameter(0)
+  %y.3 = f32[] parameter(1)
+  ROOT %add.4 = f32[] add(%x.2, %y.3)
+}
+
+%cond.10 (p.11: (s32[], f32[64,64])) -> pred[] {
+  %p.11 = (s32[], f32[64,64]{1,0}) parameter(0)
+  %gte.12 = s32[] get-tuple-element(%p.11), index=0
+  %c.13 = s32[] constant(12)
+  ROOT %cmp.14 = pred[] compare(%gte.12, %c.13), direction=LT
+}
+
+%body.20 (p.21: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p.21 = (s32[], f32[64,64]{1,0}) parameter(0)
+  %gte.22 = f32[64,64]{1,0} get-tuple-element(%p.21), index=1
+  %dot.23 = f32[64,64]{1,0} dot(%gte.22, %gte.22), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.24 = f32[64,64]{1,0} all-reduce(%dot.23), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add.1
+  %gte.25 = s32[] get-tuple-element(%p.21), index=0
+  %c.26 = s32[] constant(1)
+  %add.27 = s32[] add(%gte.25, %c.26)
+  ROOT %tuple.28 = (s32[], f32[64,64]{1,0}) tuple(%add.27, %ar.24)
+}
+
+ENTRY %main.40 (arg.41: f32[64,64]) -> f32[64,64] {
+  %arg.41 = f32[64,64]{1,0} parameter(0)
+  %c.42 = s32[] constant(0)
+  %tuple.43 = (s32[], f32[64,64]{1,0}) tuple(%c.42, %arg.41)
+  %while.44 = (s32[], f32[64,64]{1,0}) while(%tuple.43), condition=%cond.10, body=%body.20
+  ROOT %gte.45 = f32[64,64]{1,0} get-tuple-element(%while.44), index=1
+}
+"""
+
+
+class TestCheckedInWorkloads:
+    """Every checked-in workload text parses identically through both
+    front ends."""
+
+    def test_fig10_spec_gemms(self):
+        with open("specs/fig10_gemm.json") as f:
+            spec = json.load(f)
+        for wd in spec["workloads"]:
+            w = build_workload(WorkloadSpec.from_dict(wd))
+            both_mlir(w.stablehlo_text)
+
+    def test_gemm_stack(self):
+        both_mlir(synthesize_gemm_stack(SHAPES))
+
+    @pytest.mark.parametrize("kwargs", [
+        {},
+        {"steps": 4},
+        {"steps": 3, "microbatches": 2},
+        {"groups": 4},
+    ])
+    def test_sharded_stack(self, kwargs):
+        legacy, _ = both_mlir(synthesize_sharded_stack(SHAPES, **kwargs))
+        assert any(op.op == "all_reduce" for op in legacy.walk())
+
+    def test_canned_hlo(self):
+        legacy, _ = both_hlo(CANNED_HLO)
+        whiles = [op for op in legacy.walk() if op.op == "while"]
+        assert whiles and whiles[0].trip_count == 12
+
+    def test_public_entrypoints_dispatch_to_streaming(self):
+        text = synthesize_gemm_stack(SHAPES[:4])
+        assert_programs_equal(parse_stablehlo(text),
+                              parse_stablehlo(text, frontend="legacy"))
+        assert_programs_equal(parse_hlo(CANNED_HLO),
+                              parse_hlo(CANNED_HLO, frontend="legacy"))
+
+
+class TestJaxExports:
+    """Live lowered/compiled texts — the real thing the paper parses."""
+
+    @pytest.fixture(scope="class")
+    def export(self):
+        def f(w, x):
+            def body(h, wi):
+                return jnp.tanh(h @ wi), None
+            h, _ = jax.lax.scan(body, x, w)
+            return jnp.sum(h.astype(jnp.float32) ** 2)
+        w = jax.ShapeDtypeStruct((5, 64, 64), jnp.bfloat16)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.bfloat16)
+        return jax.jit(jax.grad(f, argnums=0)).lower(w, x)
+
+    def test_raw_mlir(self, export):
+        both_mlir(export.as_text())
+
+    def test_compiled_hlo(self, export):
+        both_hlo(export.compile().as_text())
+
+
+class TestTokenizerRoundTrip:
+    """Joining token lines reproduces the comment-stripped input."""
+
+    @pytest.mark.parametrize("text", [
+        synthesize_gemm_stack(SHAPES[:4]),
+        synthesize_sharded_stack(SHAPES[:4], steps=2),
+        "module @m { /* multi\nline */ func.func @main() { return } }",
+    ])
+    def test_mlir(self, text):
+        stripped = strip_comments(text)
+        toks = MlirTokens(stripped)
+        assert "\n".join(toks.lines) == "\n".join(stripped.splitlines())
+
+    def test_hlo(self):
+        stripped = strip_comments(CANNED_HLO)
+        toks = HloTokens(stripped)
+        assert "\n".join(toks.lines) == "\n".join(stripped.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# randomized well-formed op lines (seeded generators, always run)
+# ---------------------------------------------------------------------------
+
+_MNEMONICS = ["stablehlo.add", "stablehlo.multiply", "stablehlo.tanh",
+              "stablehlo.negate", "stablehlo.exponential",
+              "stablehlo.transpose", "stablehlo.reshape"]
+_DTYPES = ["f32", "bf16", "f16", "i32"]
+
+
+def _rand_type(rng: random.Random) -> str:
+    rank = rng.randint(0, 3)
+    dims = "x".join(str(rng.choice([1, 8, 64, 512])) for _ in range(rank))
+    dt = rng.choice(_DTYPES)
+    return f"tensor<{dims}x{dt}>" if dims else f"tensor<{dt}>"
+
+
+def _rand_replica_groups(rng: random.Random) -> str:
+    form = rng.randint(0, 2)
+    n = rng.choice([2, 4, 8])
+    if form == 0:        # HLO iota
+        return f"replica_groups=[{n},{8 // n}]<=[8]"
+    if form == 1:        # HLO explicit
+        ids = list(range(8))
+        groups = [ids[i::n] for i in range(n)]
+        body = ",".join("{" + ",".join(map(str, g)) + "}" for g in groups)
+        return "replica_groups={" + body + "}"
+    ids = list(range(8))  # MLIR dense
+    groups = [ids[i::n] for i in range(n)]
+    sp = " " if rng.random() < 0.5 else ""
+    body = ", ".join("[" + ", ".join(map(str, g)) + "]" for g in groups)
+    return (f"replica_groups{sp}={sp}dense<[{body}]>{sp}:{sp}"
+            f"tensor<{n}x{8 // n}xi64>")
+
+
+def _rand_mlir_module(rng: random.Random) -> str:
+    """A small well-formed MLIR module of randomized op lines."""
+    lines = ["module @fuzz {",
+             "  func.func public @main(%arg0: tensor<8x8xf32>) "
+             "-> tensor<8x8xf32> {"]
+    prev = "%arg0"
+    for v in range(rng.randint(1, 12)):
+        ty = "tensor<8x8xf32>"
+        kind = rng.random()
+        if kind < 0.6:
+            mnem = rng.choice(_MNEMONICS[:5])
+            lines.append(f"    %{v} = {mnem} {prev}, {prev} : {ty}")
+        elif kind < 0.8:
+            lines.append(
+                f"    %{v} = stablehlo.dot_general {prev}, {prev}, "
+                f"contracting_dims = [1] x [0], "
+                f"precision = [DEFAULT, DEFAULT] : ({ty}, {ty}) -> {ty}")
+        else:
+            rg = _rand_replica_groups(rng)
+            lines.append(
+                f'    %{v} = "stablehlo.all_reduce"({prev}) '
+                f"<{{channel_handle = #stablehlo.channel_handle<handle = "
+                f"{v + 1}, type = 1>, {rg}, use_global_device_ids}}> ({{")
+            lines.append(f"    ^bb0(%l{v}: tensor<f32>, %r{v}: tensor<f32>):")
+            lines.append(f"      %s{v} = stablehlo.add %l{v}, %r{v} "
+                         ": tensor<f32>")
+            lines.append(f"      stablehlo.return %s{v} : tensor<f32>")
+            lines.append(f"    }}) : ({ty}) -> {ty}")
+        prev = f"%{v}"
+    lines += [f"    return {prev} : tensor<8x8xf32>", "  }", "}"]
+    text = "\n".join(lines) + "\n"
+    if rng.random() < 0.3:   # comment perturbation
+        text = text.replace("module @fuzz {",
+                            "module @fuzz { /* fuzz\ncomment */", 1)
+    return text
+
+
+def _rand_hlo_module(rng: random.Random) -> str:
+    lines = ["HloModule fuzz, num_partitions=8", "",
+             "ENTRY %main.1 (p.2: f32[8,8]) -> f32[8,8] {",
+             "  %p.2 = f32[8,8]{1,0} parameter(0)"]
+    prev, v = "%p.2", 3
+    for _ in range(rng.randint(1, 10)):
+        kind = rng.random()
+        if kind < 0.5:
+            opc = rng.choice(["add", "multiply", "tanh", "negate"])
+            lines.append(f"  %x.{v} = f32[8,8]{{1,0}} {opc}({prev}, {prev})")
+        elif kind < 0.75:
+            lines.append(
+                f"  %x.{v} = f32[8,8]{{1,0}} dot({prev}, {prev}), "
+                "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+        else:
+            rg = rng.choice([f"replica_groups=[{n},{8 // n}]<=[8]"
+                             for n in (2, 4, 8)]
+                            + ["replica_groups={{0,1,2,3},{4,5,6,7}}"])
+            lines.append(
+                f"  %x.{v} = f32[8,8]{{1,0}} all-reduce({prev}), "
+                f"channel_id={v}, {rg}, use_global_device_ids=true")
+        prev = f"%x.{v}"
+        v += 1
+    lines += [f"  ROOT %r.{v} = f32[8,8]{{1,0}} copy({prev})", "}"]
+    return "\n".join(lines) + "\n"
+
+
+class TestRandomizedDifferential:
+    def test_mlir_sweep(self):
+        rng = random.Random(0xC0FFEE)
+        for _ in range(60):
+            text = _rand_mlir_module(rng)
+            legacy = _MlirParser(text).parse()
+            streaming = parse_stablehlo_streaming(text)
+            diff = program_diff(legacy, streaming)
+            assert not diff, f"{diff}\n--- text ---\n{text}"
+
+    def test_hlo_sweep(self):
+        rng = random.Random(0xBEEF)
+        for _ in range(60):
+            text = _rand_hlo_module(rng)
+            legacy = _HloParser(text).parse()
+            streaming = parse_hlo_streaming(text)
+            diff = program_diff(legacy, streaming)
+            assert not diff, f"{diff}\n--- text ---\n{text}"
+
+    def test_mlir_tokenizer_roundtrip_sweep(self):
+        rng = random.Random(7)
+        for _ in range(40):
+            stripped = strip_comments(_rand_mlir_module(rng))
+            toks = MlirTokens(stripped)
+            assert "\n".join(toks.lines) == "\n".join(stripped.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# _parse_replica_groups: legacy vs streaming gated helper (satellite suite)
+# ---------------------------------------------------------------------------
+
+class TestReplicaGroupsEquivalence:
+    CASES = [
+        "replica_groups=[2,4]<=[8]",
+        "replica_groups=[8,1]<=[8]",
+        "replica_groups={{0,1,2,3},{4,5,6,7}}",
+        "replica_groups={{0},{1}}",
+        "replica_groups={{}}",
+        "replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>",
+        "replica_groups = dense<[[0, 1, 2, 3, 4, 5, 6, 7]]> : tensor<1x8xi64>",
+        "replica_groups = dense<> : tensor<0x0xi64>",
+        "replica_groups=dense<[[0]]>:tensor<1x1xi64>",
+        "no groups here at all",
+        "replica_groups=",
+        "devices=[8,1]<=[8]",          # sharding, not replica_groups
+        'mhlo.sharding = "{devices=[8,1]<=[8]}"',
+    ]
+
+    @pytest.mark.parametrize("text", CASES)
+    def test_canned_forms(self, text):
+        assert _replica_groups(text) == _parse_replica_groups(text)
+
+    def test_embedded_in_op_lines(self):
+        rng = random.Random(11)
+        for _ in range(100):
+            rg = _rand_replica_groups(rng)
+            line = (f'  %1 = "stablehlo.all_reduce"(%0) <{{{rg}}}> '
+                    ": (tensor<8xf32>) -> tensor<8xf32>")
+            assert _replica_groups(line) == _parse_replica_groups(line)
+
+    @needs_hypothesis
+    def test_property_iota(self):
+        @settings(max_examples=200, deadline=None)
+        @given(g=st.integers(0, 64), s=st.integers(0, 64),
+               n=st.integers(0, 4096))
+        def check(g, s, n):
+            text = f"replica_groups=[{g},{s}]<=[{n}]"
+            assert _replica_groups(text) == _parse_replica_groups(text)
+        check()
+
+    @needs_hypothesis
+    def test_property_explicit(self):
+        @settings(max_examples=200, deadline=None)
+        @given(groups=st.lists(
+            st.lists(st.integers(0, 63), max_size=8), min_size=1,
+            max_size=8),
+            ws=st.sampled_from(["", " ", "  "]))
+        def check(groups, ws):
+            body = ("," + ws).join(
+                "{" + ",".join(map(str, g)) + "}" for g in groups)
+            text = "replica_groups={" + body + "}"
+            assert _replica_groups(text) == _parse_replica_groups(text)
+        check()
+
+    @needs_hypothesis
+    def test_property_dense(self):
+        @settings(max_examples=200, deadline=None)
+        @given(g=st.integers(0, 64), s=st.integers(0, 64),
+               ws=st.sampled_from(["", " ", "  "]))
+        def check(g, s, ws):
+            ids = ", ".join(
+                "[" + ", ".join(str(i * s + j) for j in range(s)) + "]"
+                for i in range(g))
+            text = (f"replica_groups{ws}={ws}dense<[{ids}]>{ws}:{ws}"
+                    f"tensor<{g}x{s}xi64>")
+            assert _replica_groups(text) == _parse_replica_groups(text)
+        check()
+
+    @needs_hypothesis
+    def test_property_junk(self):
+        @settings(max_examples=300, deadline=None)
+        @given(st.text(
+            alphabet="replica_groups=dense<>[]{}x,i64 \t0123456789",
+            max_size=120))
+        def check(text):
+            assert _replica_groups(text) == _parse_replica_groups(text)
+        check()
+
+
+@needs_hypothesis
+class TestHypothesisDifferential:
+    """Hypothesis-driven whole-module differential properties."""
+
+    def test_mlir_modules(self):
+        @settings(max_examples=60, deadline=None)
+        @given(seed=st.integers(0, 2**32 - 1))
+        def check(seed):
+            text = _rand_mlir_module(random.Random(seed))
+            assert not program_diff(_MlirParser(text).parse(),
+                                    parse_stablehlo_streaming(text))
+        check()
+
+    def test_hlo_modules(self):
+        @settings(max_examples=60, deadline=None)
+        @given(seed=st.integers(0, 2**32 - 1))
+        def check(seed):
+            text = _rand_hlo_module(random.Random(seed))
+            assert not program_diff(_HloParser(text).parse(),
+                                    parse_hlo_streaming(text))
+        check()
