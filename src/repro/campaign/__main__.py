@@ -353,6 +353,21 @@ def main(argv: list[str] | None = None) -> int:
                              "(default: locality)")
         ap.add_argument("--dry-run", action="store_true",
                         help="print the expanded grid and exit")
+        ap.add_argument("--resume", action="store_true",
+                        help="crash-safe restart: replay <out>/"
+                             "results.jsonl from a previous (possibly "
+                             "killed) run — completed rows land in the "
+                             "artifacts as-is (tagged 'resumed'), while "
+                             "error, missing, and stale rows re-run")
+        ap.add_argument("--retries", type=int, default=0, metavar="N",
+                        help="re-run a job whose evaluate phase raised, "
+                             "up to N extra attempts (default: 0; plan "
+                             "and transport failures are not retried)")
+        ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                        help="test-only: install a deterministic fault-"
+                             "injection plan (JSON; see repro.serve."
+                             "faults) via the environment so every "
+                             "worker process inherits it")
         ap.add_argument("--server", default=None, metavar="URL",
                         help="run on a warm repro.serve daemon (e.g. "
                              "http://127.0.0.1:8733) instead of "
@@ -417,6 +432,12 @@ def main(argv: list[str] | None = None) -> int:
 
     from .summary import format_table
 
+    if args.fault_plan:
+        # through the environment on purpose: spawned campaign workers
+        # (and any daemon this process boots) inherit the plan
+        from ..serve import faults
+        os.environ[faults.ENV_PLAN] = args.fault_plan
+
     specs = load_specs(args.spec, session=session)
     if not args.server:
         _preset_device_count(specs)
@@ -432,8 +453,19 @@ def main(argv: list[str] | None = None) -> int:
                                          "estimator", "slicer", "topology")))
             continue
         out_dir = os.path.join(args.out, name) if multi else args.out
+        resume_rows = None
+        if args.resume:
+            prev = os.path.join(out_dir, "results.jsonl")
+            resume_rows = []
+            if os.path.exists(prev):
+                resume_rows = _load_results_jsonl(prev)
+                print(f"  resuming from {prev} "
+                      f"({len(resume_rows)} prior rows)")
+            else:
+                print(f"  --resume: no {prev} yet, running from scratch")
         if args.server:
-            summary = _run_on_server(args, spec, name, multi, out_dir)
+            summary = _run_on_server(args, spec, name, multi, out_dir,
+                                     resume_rows=resume_rows)
         else:
             from .runner import run_campaign
 
@@ -441,7 +473,8 @@ def main(argv: list[str] | None = None) -> int:
                 spec, out_dir=out_dir, executor=args.executor,
                 max_workers=args.jobs, cache_path=args.cache,
                 schedule=args.schedule, progress=not args.quiet,
-                session=session)
+                session=session, resume_rows=resume_rows,
+                retries=args.retries)
             summary = result.summary
             if result.csv_path:
                 print(f"  wrote {result.jsonl_path}, {result.csv_path}, "
@@ -452,7 +485,7 @@ def main(argv: list[str] | None = None) -> int:
 
 
 def _run_on_server(args, spec: CampaignSpec, name: str, multi: bool,
-                   out_dir: str) -> dict:
+                   out_dir: str, resume_rows: list | None = None) -> dict:
     """Run one campaign on a warm ``repro.serve`` daemon: stream the
     rows back and materialize the standard artifact set locally, so
     downstream tooling (``report --results``, the CI golden diff) sees
@@ -465,14 +498,18 @@ def _run_on_server(args, spec: CampaignSpec, name: str, multi: bool,
     client = ServeClient(args.server)
     kwargs: dict = {"executor": args.executor, "schedule": args.schedule,
                     "max_workers": args.jobs}
+    if getattr(args, "retries", 0):
+        kwargs["retries"] = args.retries
+    if resume_rows is not None:
+        kwargs["resume_rows"] = resume_rows
     if multi:
         kwargs["spec"] = spec.to_dict()
     else:
         kwargs["spec_path"] = os.path.abspath(args.spec)
     stream = client.campaign(**kwargs)
-    rows = []
+    fresh = []
     for row in stream:
-        rows.append(row)
+        fresh.append(row)
         if not args.quiet:
             tag = (f"{row['step_time_s'] * 1e3:9.3f} ms"
                    if "step_time_s" in row else f"ERROR {row.get('error')}")
@@ -480,6 +517,17 @@ def _run_on_server(args, spec: CampaignSpec, name: str, multi: bool,
                   f"{row['system']} × {row['estimator']} × "
                   f"{row['slicer']}: {tag}", flush=True)
     summary = stream.summary or {}
+    rows = fresh
+    if resume_rows:
+        # the daemon replays trusted rows without re-streaming them
+        # (this client already has them) — fold them back in, letting
+        # freshly streamed rows win and dropping rows outside the grid
+        seen = {r.get("job_id") for r in fresh}
+        grid = summary.get("num_jobs", len(resume_rows) + len(fresh))
+        kept = [dict(r, resumed=True) for r in resume_rows
+                if r.get("job_id") not in seen and "error" not in r
+                and r.get("job_id", grid) < grid]
+        rows = sorted(kept + fresh, key=lambda r: r.get("job_id", 0))
     paths = write_campaign_artifacts(rows, summary, out_dir)
     print(f"  wrote {paths['jsonl']}, {paths['csv']}, {paths['summary']} "
           f"(served by {args.server})")

@@ -43,7 +43,7 @@ import json
 import os
 import threading
 import time
-from concurrent.futures import (FIRST_COMPLETED, Executor,
+from concurrent.futures import (FIRST_COMPLETED, Executor, Future,
                                 ProcessPoolExecutor, ThreadPoolExecutor,
                                 wait)
 from dataclasses import dataclass, field
@@ -52,6 +52,7 @@ from ..core.catalog import SystemRegistry, default_registry
 from ..core.estimators.cache import PersistentCache
 from ..core.pipeline import PredictionJob, PredictionPlan, Workload
 from ..core.registry import ESTIMATORS, TOPOLOGIES, BuildContext
+from ..serve import faults
 from .builders import (build_estimator, build_system, build_topology,
                        build_workload)
 from .plans import PlanStore
@@ -86,7 +87,17 @@ class _Registries:
         """The non-global registrations, as picklable maps — what ships
         to process-pool workers so they can rebuild the same scope.
         (Classes pickle by reference: a plugin class must be importable
-        from the worker, i.e. defined at module level.)"""
+        from the worker, i.e. defined at module level — checked here, at
+        the ship point, so the failure is one actionable error instead
+        of a pickling traceback from inside the pool.)"""
+        problems: list[str] = []
+        for reg in (self.estimators, self.topologies):
+            if reg is not None and hasattr(reg, "portability_errors"):
+                problems.extend(reg.portability_errors())
+        if problems:
+            raise ValueError(
+                "session-scoped backend classes cannot cross the "
+                "worker-process boundary:\n  - " + "\n  - ".join(problems))
         est = self.estimators.local_entries() if self.estimators else {}
         topo = self.topologies.local_entries() if self.topologies else {}
         sysd: dict = {}
@@ -123,11 +134,33 @@ class _Registries:
             systems=self.systems, base_dir=self.base_dir)
 
 
+#: stable error-row classification (satellite: error taxonomy).
+#: ``plan``      — the workload's plan phase failed (parse/slice/build);
+#: ``evaluate``  — the job's evaluate phase raised;
+#: ``transport`` — the executor plumbing failed (a dead worker process),
+#:                 not the job itself.
+ERROR_TYPES = ("plan", "evaluate", "transport")
+
+
+def _error_row(job: JobSpec, exc, error_type: str) -> dict:
+    """An error result row: the grid point's axes plus a stable
+    ``error_type`` (one of :data:`ERROR_TYPES`) and the exception class
+    prefixed message."""
+    row = dict(job.to_row())
+    row["error"] = (exc if isinstance(exc, str)
+                    else f"{type(exc).__name__}: {exc}")
+    row["error_type"] = error_type
+    return row
+
+
 def _execute(job: JobSpec, plan: PredictionPlan, store,
              regs: _Registries | None = None) -> tuple[dict, dict]:
     """Evaluate one grid point against its shared plan; returns
     (result_row, freshly_computed_entries)."""
     t0 = time.perf_counter()
+    if faults.active():
+        faults.trip("evaluate", workload=job.workload, system=job.system,
+                    estimator=job.estimator.kind)
     regs = regs or _Registries()
     system = build_system(job.system, registry=regs.systems)
     ctx = regs.context(system_name=job.system, program=plan.program)
@@ -220,21 +253,74 @@ class CampaignResult:
     wall_s: float = 0.0
     cache: dict = field(default_factory=dict)
     plans: dict = field(default_factory=dict)
+    resumed_rows: int = 0            # prior rows replayed, not re-run
+    retried_rows: int = 0            # jobs that needed >= 1 retry
 
     @property
     def ok_rows(self) -> list[dict]:
         return [r for r in self.rows if "error" not in r]
 
 
+#: row fields a resumed row must match against the expanded grid before
+#: it is trusted (``fidelity`` is excluded on purpose: rows record the
+#: fidelity actually costed, which may be a fallback from the spec's).
+RESUME_MATCH_KEYS = ("workload", "system", "estimator", "slicer",
+                     "topology", "overlap", "straggler_factor",
+                     "compression")
+
+
+def _match_resume_rows(jobs: list[JobSpec], resume_rows: list[dict]
+                       ) -> tuple[dict[int, dict], dict]:
+    """Partition a partial run's rows into trusted (replayed as-is) and
+    everything that must re-run.
+
+    A prior row is trusted only when its ``job_id`` exists in the
+    expanded grid, it carries no ``error``, and its grid axes match the
+    job exactly (a changed spec silently invalidates stale rows instead
+    of smuggling them into the new grid).  Returns ``(job_id -> row,
+    report)`` where the report counts resumed/stale rows and the error
+    rows being retried, by ``error_type``."""
+    expected = {j.job_id: j.to_row() for j in jobs}
+    trusted: dict[int, dict] = {}
+    report = {"resumed": 0, "rerun_errors": 0, "stale": 0, "missing": 0,
+              "rerun_errors_by_type": {}}
+    for r in resume_rows:
+        jid = r.get("job_id")
+        exp = expected.get(jid)
+        if exp is None:
+            report["stale"] += 1
+            continue
+        if "error" in r:
+            et = r.get("error_type", "unknown")
+            report["rerun_errors"] += 1
+            report["rerun_errors_by_type"][et] = (
+                report["rerun_errors_by_type"].get(et, 0) + 1)
+            continue
+        if any(r.get(k) != exp[k] for k in RESUME_MATCH_KEYS):
+            report["stale"] += 1
+            continue
+        trusted[jid] = dict(r)
+        trusted[jid]["resumed"] = True
+    report["resumed"] = len(trusted)
+    report["missing"] = (len(jobs) - len(trusted)
+                         - report["rerun_errors"])
+    return trusted, report
+
+
 def _workload_texts(spec: CampaignSpec,
-                    workloads: dict[str, Workload] | None) -> dict:
+                    workloads: dict[str, Workload] | None,
+                    only: set[str] | None = None) -> dict:
     """name -> {"raw": stablehlo, "optimized": hlo} for every grid workload.
 
     In-memory ``workloads`` take precedence; anything else is materialized
-    from its spec (file read or jax export)."""
+    from its spec (file read or jax export).  ``only`` restricts to the
+    named workloads (a resumed campaign skips materializing — possibly
+    re-exporting — workloads whose every row was replayed)."""
     provided = dict(workloads or {})
     texts: dict[str, dict] = {}
     for wspec in spec.workloads:
+        if only is not None and wspec.name not in only:
+            continue
         w = provided.get(wspec.name)
         if w is None:
             w = build_workload(wspec)
@@ -303,7 +389,9 @@ def run_campaign(spec: CampaignSpec, *,
                  schedule: str = "locality",
                  progress: bool = False,
                  on_row=None,
-                 session=None) -> CampaignResult:
+                 session=None,
+                 resume_rows: list[dict] | None = None,
+                 retries: int = 0) -> CampaignResult:
     """Expand ``spec`` into jobs, plan, run them, and collect/stream
     results.
 
@@ -328,7 +416,17 @@ def run_campaign(spec: CampaignSpec, *,
     repeated campaign re-parses nothing.  The returned cache/plan
     reports count only *this* run's activity (deltas against the warm
     store's counters); ``on_row(row)`` observes each result row as it
-    completes (the serve daemon streams these to HTTP clients)."""
+    completes (the serve daemon streams these to HTTP clients).
+
+    Robustness knobs: ``resume_rows`` replays a partial prior run —
+    trusted rows (see :func:`_match_resume_rows`) land in the output
+    tagged ``"resumed": true`` without re-running (and without firing
+    ``on_row``: stream consumers have seen them already), while error,
+    stale, and missing rows re-run; the summary gains a ``resume``
+    report saying exactly what was replayed vs retried.  ``retries``
+    re-runs a job whose *evaluate* phase raised, up to N extra attempts
+    (plan failures are deterministic and transport failures mean the
+    executor itself died, so neither is retried)."""
     if executor not in EXECUTORS:
         raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
     if schedule not in SCHEDULES:
@@ -337,7 +435,16 @@ def run_campaign(spec: CampaignSpec, *,
     spec.validate(provided=set(workloads or {}), session=session)
     regs = _Registries.for_session(session, spec)
     jobs = spec.expand()
-    texts = _workload_texts(spec, workloads)
+    resumed: dict[int, dict] = {}
+    resume_report: dict | None = None
+    if resume_rows is not None:
+        resumed, resume_report = _match_resume_rows(jobs, resume_rows)
+        todo = [j for j in jobs if j.job_id not in resumed]
+    else:
+        todo = jobs
+    texts = _workload_texts(
+        spec, workloads,
+        only={j.workload for j in todo} if resumed else None)
 
     if cache is None:
         cache = (PersistentCache(cache_path) if cache_path
@@ -355,7 +462,7 @@ def run_campaign(spec: CampaignSpec, *,
         plans = plan_store
         plans.add_texts(texts)
     parse0, built0 = plans.parse_count, plans.plans_built
-    plan_keys, plan_errors = _build_plans(jobs, plans)
+    plan_keys, plan_errors = _build_plans(todo, plans)
 
     jsonl_path = None
     jsonl_file = None
@@ -372,6 +479,12 @@ def run_campaign(spec: CampaignSpec, *,
                 jsonl_file.flush()
         if on_row is not None:
             on_row(row)
+        if faults.active():
+            # fires *after* the row is flushed/streamed: a kill here
+            # loses only rows not yet emitted, which is the guarantee
+            # the chaos tests pin down
+            faults.trip("campaign_row", job_id=row.get("job_id"),
+                        workload=row.get("workload"))
         if progress:
             tag = (f"{row['step_time_s'] * 1e3:9.3f} ms"
                    if "step_time_s" in row else f"ERROR {row.get('error')}")
@@ -382,26 +495,34 @@ def run_campaign(spec: CampaignSpec, *,
 
     rows: list[dict] = []
     new_entry_count = 0
+    retried_rows = 0
     try:
+        # resumed rows replay straight into the artifacts (jsonl but not
+        # on_row: a resuming stream consumer already holds them)
+        for jid in sorted(resumed):
+            rows.append(resumed[jid])
+            if jsonl_file:
+                with jsonl_lock:
+                    jsonl_file.write(json.dumps(resumed[jid]) + "\n")
+                    jsonl_file.flush()
         # jobs whose plan could not be built fail up front, as rows
-        for job in jobs:
+        for job in todo:
             err = plan_errors.get(plan_keys[job.job_id])
             if err is not None:
-                row = dict(job.to_row())
-                row["error"] = err
+                row = _error_row(job, err, "plan")
                 rows.append(row)
                 emit_row(row)
-        runnable = [j for j in jobs
+        runnable = [j for j in todo
                     if plan_keys[j.job_id] not in plan_errors]
         chains = _schedule_chains(runnable, plan_keys, plans, schedule)
         if executor == "process":
-            prows, new_entry_count = _run_process_pool(
+            prows, new_entry_count, retried_rows = _run_process_pool(
                 chains, plan_keys, plans, cache, max_workers, emit_row,
-                out_dir, regs)
+                out_dir, regs, retries)
         else:
-            prows, new_entry_count = _run_in_process(
+            prows, new_entry_count, retried_rows = _run_in_process(
                 chains, plan_keys, plans, cache, emit_row,
-                max_workers if executor == "thread" else 0, regs)
+                max_workers if executor == "thread" else 0, regs, retries)
         rows.extend(prows)
     finally:
         if jsonl_file:
@@ -411,10 +532,13 @@ def run_campaign(spec: CampaignSpec, *,
     if cache_path:
         cache.save(cache_path)
 
-    total_hits = sum(r.get("cache_hits", 0) for r in rows)
-    total_misses = sum(r.get("cache_misses", 0) for r in rows)
-    saved = sum(r.get("cache_saved_s", 0.0) for r in rows)
-    miss_cost = sum(r.get("cache_miss_cost_s", 0.0) for r in rows)
+    # cache accounting covers this run's work only: a resumed row's
+    # hit/miss counters describe the *previous* run's store traffic
+    fresh = [r for r in rows if not r.get("resumed")]
+    total_hits = sum(r.get("cache_hits", 0) for r in fresh)
+    total_misses = sum(r.get("cache_misses", 0) for r in fresh)
+    saved = sum(r.get("cache_saved_s", 0.0) for r in fresh)
+    miss_cost = sum(r.get("cache_miss_cost_s", 0.0) for r in fresh)
     wall = time.perf_counter() - t0
     cache_report = {
         "path": cache_path,
@@ -439,7 +563,7 @@ def run_campaign(spec: CampaignSpec, *,
     plan_report = {
         "schedule": schedule,
         "jobs": len(jobs),
-        "plan_keys": len({plan_keys[j.job_id] for j in jobs}),
+        "plan_keys": len({plan_keys[j.job_id] for j in todo}),
         # this run's parse/slice work only: zero on a warm plan store
         # that already holds every referenced plan
         "parse_calls": plans.parse_count - parse0,
@@ -450,6 +574,11 @@ def run_campaign(spec: CampaignSpec, *,
     summary["wall_s"] = wall
     summary["cache"] = cache_report
     summary["plans"] = plan_report
+    if resume_report is not None:
+        summary["resume"] = resume_report
+    if retries or retried_rows:
+        summary["retries"] = {"configured": retries,
+                              "rows_retried": retried_rows}
     # full spec provenance: a streamed results dir is self-describing,
     # so `report --results` (and humans) can recover the grid later
     summary["spec"] = spec.to_dict()
@@ -465,14 +594,15 @@ def run_campaign(spec: CampaignSpec, *,
     return CampaignResult(
         name=spec.name, rows=rows, summary=summary, jsonl_path=jsonl_path,
         csv_path=csv_path, summary_path=summary_path, wall_s=wall,
-        cache=cache_report, plans=plan_report)
+        cache=cache_report, plans=plan_report,
+        resumed_rows=len(resumed), retried_rows=retried_rows)
 
 
 def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
                     plans: PlanStore, cache: PersistentCache,
                     emit_row, thread_workers: int,
-                    regs: _Registries | None = None
-                    ) -> tuple[list[dict], int]:
+                    regs: _Registries | None = None,
+                    retries: int = 0) -> tuple[list[dict], int, int]:
     """Serial or thread-pool execution over one shared live cache store.
 
     Thread mode submits each chain's leader first and releases the
@@ -481,16 +611,21 @@ def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
     new_keys: set[str] = set()
     rows: list[dict] = []
     rows_lock = threading.Lock()
+    retried = [0]
 
     def run_one(job: JobSpec) -> None:
-        try:
-            plan = plans.get(*plan_keys[job.job_id])
-            row, new = _execute(job, plan, cache, regs)
-            with rows_lock:
-                new_keys.update(new)
-        except Exception as e:  # noqa: BLE001 — keep the campaign going
-            row = dict(job.to_row())
-            row["error"] = f"{type(e).__name__}: {e}"
+        for attempt in range(retries + 1):
+            try:
+                plan = plans.get(*plan_keys[job.job_id])
+                row, new = _execute(job, plan, cache, regs)
+                with rows_lock:
+                    new_keys.update(new)
+                break
+            except Exception as e:  # noqa: BLE001 — keep the campaign going
+                row = _error_row(job, e, "evaluate")
+                if attempt == 0 and retries:
+                    with rows_lock:
+                        retried[0] += 1
         with rows_lock:
             rows.append(row)
         emit_row(row)
@@ -503,7 +638,7 @@ def _run_in_process(chains: list[list[JobSpec]], plan_keys: dict,
         with ThreadPoolExecutor(max_workers=thread_workers) as pool:
             _drain_chains(pool, chains,
                           submit=lambda job, lead: pool.submit(run_one, job))
-    return rows, len(new_keys)
+    return rows, len(new_keys), retried[0]
 
 
 def _drain_chains(pool: Executor, chains: list[list[JobSpec]],
@@ -529,8 +664,8 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
                       plans: PlanStore, cache: PersistentCache,
                       max_workers: int | None, emit_row,
                       out_dir: str | None,
-                      regs: _Registries | None = None
-                      ) -> tuple[list[dict], int]:
+                      regs: _Registries | None = None,
+                      retries: int = 0) -> tuple[list[dict], int, int]:
     """Process-pool execution over pickled plan files.
 
     Workers never see workload text: the parent dumps each built plan to
@@ -545,6 +680,7 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
     import shutil
     import sys
     import tempfile
+    from concurrent.futures.process import BrokenProcessPool
 
     # prefer spawn: the parent may hold live jax threads and fork of a
     # threaded process risks deadlock.  spawn re-imports __main__, which
@@ -556,6 +692,7 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
               else "fork")
     rows: list[dict] = []
     new_total = 0
+    retried = 0
     # path-backed workers open the shared store themselves — don't ship
     # them a (potentially large) snapshot they would never read
     snapshot = {} if cache.path else dict(cache.entries)
@@ -579,19 +716,41 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
                 # warm only snapshot-mode siblings: path-backed workers
                 # already observe the leader's entries via the log
                 warm = lead_entries if not cache.path else None
-                return pool.submit(_worker_run, job,
-                                   plan_keys[job.job_id], warm)
+                try:
+                    return pool.submit(_worker_run, job,
+                                       plan_keys[job.job_id], warm)
+                except BrokenProcessPool as e:
+                    # dead pool: hand back a pre-failed future so the
+                    # drain keeps going and every remaining job gets a
+                    # transport error row instead of aborting the run
+                    f = Future()
+                    f.set_exception(e)
+                    return f
 
             def on_done(chain, fut):
-                nonlocal new_total
+                nonlocal new_total, retried
                 job = chain[0]
                 new = {}
-                try:
-                    row, new = fut.result()
-                    new_total += cache.merge(new)
-                except Exception as e:  # noqa: BLE001
-                    row = dict(job.to_row())
-                    row["error"] = f"{type(e).__name__}: {e}"
+                for attempt in range(retries + 1):
+                    try:
+                        row, new = (fut.result() if attempt == 0
+                                    else submit(job, None).result())
+                        new_total += cache.merge(new)
+                        break
+                    except BrokenProcessPool as e:
+                        # the pool itself died (a worker was SIGKILLed
+                        # or crashed hard): every pending future fails
+                        # the same way, and resubmitting can't help —
+                        # record a transport row and let the campaign
+                        # drain, leaving a resumable results.jsonl
+                        row = _error_row(job, e, "transport")
+                        break
+                    except Exception as e:  # noqa: BLE001
+                        # raised *inside* the worker and pickled back:
+                        # an evaluate failure, retryable
+                        row = _error_row(job, e, "evaluate")
+                        if attempt == 0 and retries:
+                            retried += 1
                 rows.append(row)
                 emit_row(row)
                 return new
@@ -600,7 +759,7 @@ def _run_process_pool(chains: list[list[JobSpec]], plan_keys: dict,
     finally:
         if not out_dir:
             shutil.rmtree(plan_dir, ignore_errors=True)
-    return rows, new_total
+    return rows, new_total, retried
 
 
 def _write_csv(rows: list[dict], path: str) -> None:

@@ -17,12 +17,21 @@ def _point(row: dict) -> dict:
 def summarize(name: str, rows: list[dict]) -> dict:
     ok = [r for r in rows if "error" not in r and "step_time_s" in r]
     failed = [r for r in rows if "error" in r]
+    errors_by_type: dict[str, int] = {}
+    for r in failed:
+        et = r.get("error_type", "unknown")
+        errors_by_type[et] = errors_by_type.get(et, 0) + 1
     out: dict = {
         "campaign": name,
         "num_jobs": len(rows),
         "num_ok": len(ok),
         "num_failed": len(failed),
+        # stable taxonomy (plan/evaluate/transport): what a resume run
+        # reads to report exactly which failure classes it is retrying
+        "errors_by_type": errors_by_type,
+        "num_resumed": sum(1 for r in rows if r.get("resumed")),
         "failures": [{"job_id": r["job_id"], "error": r["error"],
+                      "error_type": r.get("error_type", "unknown"),
                       **_point(r)} for r in failed],
     }
     if not ok:
@@ -87,8 +96,23 @@ def format_table(summary: dict) -> str:
     """Human-readable digest for the CLI."""
     lines = [f"campaign {summary['campaign']}: "
              f"{summary['num_ok']}/{summary['num_jobs']} jobs ok"]
+    resume = summary.get("resume")
+    if resume:
+        by_type = ", ".join(
+            f"{k}={v}"
+            for k, v in sorted(resume["rerun_errors_by_type"].items()))
+        lines.append(
+            f"  resume: {resume['resumed']} rows replayed, "
+            f"{resume['rerun_errors']} errors retried "
+            f"({by_type or 'none'}), "
+            f"{resume['missing']} missing, {resume['stale']} stale")
+    retries = summary.get("retries")
+    if retries and retries.get("rows_retried"):
+        lines.append(f"  retries: {retries['rows_retried']} rows retried "
+                     f"(up to {retries['configured']} attempts)")
     for r in summary.get("failures", []):
-        lines.append(f"  FAILED job {r['job_id']}: {r['error']}")
+        lines.append(f"  FAILED job {r['job_id']} "
+                     f"[{r.get('error_type', 'unknown')}]: {r['error']}")
     if "best" in summary:
         b, w = summary["best"], summary["worst"]
         lines.append(

@@ -132,6 +132,11 @@ class PersistentCache:
     estimator, so last-writer-wins races are harmless.
     """
 
+    #: test-only crash-simulation hook (``repro.serve.faults``): called
+    #: after a batch is flushed but before index maintenance; returning
+    #: True skips the index step (a writer that died between the two).
+    fault_hook = None
+
     def __init__(self, path: str | None = None, lazy: bool = False):
         self.path = path
         self.entries: dict[str, float] = {}
@@ -613,6 +618,9 @@ class PersistentCache:
                     self._offset = f.tell()
                     st = os.fstat(f.fileno())
                     self._stat = (st.st_ino, st.st_size, st.st_mtime_ns)
+                    if (PersistentCache.fault_hook is not None
+                            and PersistentCache.fault_hook(self, f)):
+                        return  # simulated writer crash: no index step
                     # index maintenance, same flock: append when the
                     # sidecar provably covers everything before this
                     # batch, else regenerate it from the log.  The

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import difflib
 import importlib
+import sys
 from dataclasses import dataclass
 
 
@@ -198,6 +199,42 @@ class Registry:
         """This registry's own (non-inherited) resolved entries — what a
         session ships to process-pool campaign workers."""
         return dict(self._entries)
+
+    def portability_errors(self) -> list[str]:
+        """Why this scope's classes could NOT cross a process boundary.
+
+        Backend *classes* pickle by reference (``module.QualName``), so
+        shipping a session's scoped registrations to worker processes —
+        the campaign process executor, a serve fleet — requires each
+        class to be importable at module level from the worker.  Returns
+        one actionable message per offending class ([] when all are
+        portable).  Systems ship by value and are never checked."""
+        errs = []
+        for kind, cls in self._entries.items():
+            where = f"{getattr(cls, '__module__', '?')}." \
+                    f"{getattr(cls, '__qualname__', '?')}"
+            fix = (f"define the class at the top level of an importable "
+                   f"module, or keep the work in-process (executor="
+                   f"'serial'/'thread', a single-worker daemon)")
+            if "<locals>" in getattr(cls, "__qualname__", ""):
+                errs.append(
+                    f"{self.label} kind {kind!r} is registered with "
+                    f"{where}, a class defined inside a function — it "
+                    f"cannot be pickled by reference into a worker "
+                    f"process; {fix}")
+                continue
+            mod = sys.modules.get(getattr(cls, "__module__", ""))
+            obj = mod
+            for part in getattr(cls, "__qualname__", "?").split("."):
+                obj = getattr(obj, part, None)
+            if obj is not cls:
+                errs.append(
+                    f"{self.label} kind {kind!r} is registered with "
+                    f"{where}, which is not reachable as a module "
+                    f"attribute — a worker process cannot re-import it "
+                    f"(did you register a dynamically created or "
+                    f"shadowed class?); {fix}")
+        return errs
 
 
 #: the global estimator vocabulary; builtin kinds resolve lazily from

@@ -6,8 +6,11 @@ Two unrelated-but-cohabiting halves:
   long-lived HTTP daemon holding one warm :class:`repro.api.Session`)
   and :mod:`repro.serve.client` (the stdlib thin client everything
   downstream — CI, benchmarks, the campaign CLI's ``--server`` mode —
-  talks through).  Start one with ``python -m repro.serve``; see
-  ``docs/serving.md``.
+  talks through).  Start one with ``python -m repro.serve``; scale it
+  to a supervised worker fleet with ``--workers N``
+  (:mod:`repro.serve.fleet`) and chaos-test it with seeded fault plans
+  (:mod:`repro.serve.faults`).  See ``docs/serving.md`` and
+  ``docs/robustness.md``.
 * **decode-loop workloads** — :mod:`repro.serve.decode`'s batched
   autoregressive serving step (requires jax).
 
@@ -19,9 +22,11 @@ from __future__ import annotations
 
 _DECODE = ("ServeResult", "greedy_decode", "make_serve_step")
 _SERVER = ("PredictionService", "PredictionServer")
-_CLIENT = ("ServeClient", "ServeError", "write_campaign_artifacts")
+_CLIENT = ("ServeClient", "ServeError", "CampaignStream",
+           "write_campaign_artifacts")
+_FLEET = ("FleetSupervisor", "route_index", "request_class")
 
-__all__ = [*_DECODE, *_SERVER, *_CLIENT]
+__all__ = [*_DECODE, *_SERVER, *_CLIENT, *_FLEET]
 
 
 def __getattr__(name: str):
@@ -34,4 +39,7 @@ def __getattr__(name: str):
     if name in _CLIENT:
         from . import client
         return getattr(client, name)
+    if name in _FLEET:
+        from . import fleet
+        return getattr(fleet, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

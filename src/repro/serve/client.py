@@ -5,21 +5,42 @@ CLI's ``--server`` mode, benchmarks, notebook what-ifs — talks through
 :class:`ServeClient` so the wire format lives in exactly one place.
 urllib only; no new dependencies.
 
-Connection errors at *connect* time (daemon still booting, socket not
-yet listening) are retried with bounded exponential backoff — nothing
-has reached the server yet, so the retry is always safe.  HTTP-level
+Retry policy (the asymmetry is deliberate):
+
+* **GETs** (``/healthz``, ``/stats``) are idempotent, so they retry on
+  *any* transient transport error — connect refused, reset, timeout.
+  Worst case a retry re-reads a counter snapshot.
+* **POSTs** retry only on ``ConnectionRefusedError``: that is the one
+  failure mode where the request provably never reached the daemon
+  (the socket was never accepted), so a retry cannot double-execute.
+  A reset or timeout mid-POST is ambiguous — the daemon may be running
+  the campaign right now — and blind re-POSTing would double work and
+  double-count every ``/stats`` counter.  Those surface as
+  :class:`ServeError` for the caller (or a fleet supervisor, which can
+  degrade instead).
+
+Every request carries a socket ``timeout_s`` (so a wedged daemon can't
+block the client forever) and forwards it as ``X-Repro-Timeout-S``,
+which a fleet supervisor uses as the per-worker deadline budget; an
+optional total ``deadline_s`` bounds the whole retry loop.  HTTP-level
 errors are never retried; they surface as :class:`ServeError` with the
 daemon's status code and error payload.
 """
 from __future__ import annotations
 
+import http.client
 import json
+import socket
 import time
 import urllib.error
 import urllib.request
 
 __all__ = ["ServeClient", "ServeError", "CampaignStream",
            "write_campaign_artifacts"]
+
+#: header carrying the client's per-request budget through the fleet
+#: supervisor to the worker talking to it
+TIMEOUT_HEADER = "X-Repro-Timeout-S"
 
 
 class ServeError(RuntimeError):
@@ -40,27 +61,43 @@ class CampaignStream:
     """An in-flight streamed campaign: iterate rows as the daemon emits
     them; ``summary`` is populated once the stream's final line arrives
     (iterating to exhaustion guarantees it).  A mid-stream server error
-    surfaces as :class:`ServeError` from the iterator."""
+    surfaces as :class:`ServeError` from the iterator, as does a broken
+    transport (connection reset, timeout) — with ``rows_seen`` telling
+    the caller how much of the grid it already holds, enough to resume
+    via ``resume_rows``."""
 
     def __init__(self, resp):
         self._resp = resp
         self.summary: dict | None = None
+        self.rows_seen = 0
 
     def __iter__(self):
-        with self._resp:
-            for raw in self._resp:
-                line = raw.strip()
-                if not line:
-                    continue
-                obj = json.loads(line)
-                event = obj.get("event")
-                if event == "summary":
-                    self.summary = obj["summary"]
-                elif event == "error":
-                    raise ServeError(obj.get("error", "campaign failed"),
-                                     status=500, payload=obj)
-                else:
-                    yield obj
+        try:
+            with self._resp:
+                for raw in self._resp:
+                    line = raw.strip()
+                    if not line:
+                        continue
+                    obj = json.loads(line)
+                    event = obj.get("event")
+                    if event == "summary":
+                        self.summary = obj["summary"]
+                    elif event == "error":
+                        raise ServeError(
+                            obj.get("error", "campaign failed"),
+                            status=500, payload=obj)
+                    else:
+                        self.rows_seen += 1
+                        yield obj
+        except (OSError, http.client.HTTPException, ValueError) as e:
+            raise ServeError(
+                f"campaign stream broke after {self.rows_seen} rows: "
+                f"{type(e).__name__}: {e}", status=0) from e
+        if self.summary is None:
+            raise ServeError(
+                f"campaign stream ended without a summary after "
+                f"{self.rows_seen} rows (daemon died mid-stream?)",
+                status=0)
 
     def collect(self) -> tuple[list[dict], dict | None]:
         """Drain the stream; returns (rows, summary)."""
@@ -69,27 +106,67 @@ class CampaignStream:
 
 
 class ServeClient:
-    """Client for one daemon URL (e.g. ``http://127.0.0.1:8733``)."""
+    """Client for one daemon URL (e.g. ``http://127.0.0.1:8733``).
+
+    ``timeout_s`` is the per-request socket timeout (and the budget
+    advertised to the fleet); ``deadline_s``, when set, caps the total
+    time any single logical request may spend across retries."""
 
     def __init__(self, url: str, *, timeout_s: float = 120.0,
-                 connect_retries: int = 5, backoff_s: float = 0.1):
+                 connect_retries: int = 5, backoff_s: float = 0.1,
+                 deadline_s: float | None = None):
         self.url = url.rstrip("/")
         self.timeout_s = timeout_s
         self.connect_retries = connect_retries
         self.backoff_s = backoff_s
+        self.deadline_s = deadline_s
 
     # ----------------------------- transport -----------------------------
 
+    @staticmethod
+    def _transient(e: Exception) -> bool:
+        """A transport failure that may heal on retry (vs a sick daemon
+        actively answering with errors, which won't)."""
+        if isinstance(e, urllib.error.URLError):
+            return ServeClient._transient(e.reason) if isinstance(
+                e.reason, Exception) else True
+        return isinstance(e, (ConnectionError, socket.timeout,
+                              TimeoutError, http.client.HTTPException,
+                              OSError))
+
+    @staticmethod
+    def _never_reached(e: Exception) -> bool:
+        """True only when the request provably never reached the daemon
+        (connect refused: the socket was never accepted), making a
+        retry safe even for non-idempotent POSTs."""
+        if isinstance(e, urllib.error.URLError):
+            return isinstance(e.reason, ConnectionRefusedError)
+        return isinstance(e, ConnectionRefusedError)
+
     def _request(self, method: str, path: str, body: dict | None = None,
-                 *, stream: bool = False):
+                 *, stream: bool = False, timeout_s: float | None = None):
         data = None if body is None else json.dumps(body).encode()
-        headers = {"Content-Type": "application/json"} if data else {}
+        timeout = self.timeout_s if timeout_s is None else timeout_s
+        headers = {TIMEOUT_HEADER: f"{timeout:g}"}
+        if data:
+            headers["Content-Type"] = "application/json"
+        deadline = (None if self.deadline_s is None
+                    else time.monotonic() + self.deadline_s)
+        idempotent = method == "GET"
         last: Exception | None = None
         for attempt in range(self.connect_retries + 1):
+            per_try = timeout
+            if deadline is not None:
+                per_try = min(per_try, deadline - time.monotonic())
+                if per_try <= 0:
+                    raise ServeError(
+                        f"deadline ({self.deadline_s:g}s) exceeded "
+                        f"before {method} {path} could complete",
+                        status=0) from last
             req = urllib.request.Request(self.url + path, data=data,
                                          headers=headers, method=method)
             try:
-                resp = urllib.request.urlopen(req, timeout=self.timeout_s)
+                resp = urllib.request.urlopen(req, timeout=per_try)
                 return resp if stream else json.loads(resp.read())
             except urllib.error.HTTPError as e:
                 try:
@@ -99,24 +176,23 @@ class ServeClient:
                 raise ServeError(
                     payload.get("error", f"HTTP {e.code} on {path}"),
                     status=e.code, payload=payload) from e
-            except urllib.error.URLError as e:
-                # retry only failures to *connect* — the request never
-                # reached the daemon, so a retry cannot double-execute
+            except Exception as e:  # noqa: BLE001 — classified below
                 last = e
-                if not isinstance(e.reason, ConnectionRefusedError):
+                retryable = (self._transient(e) if idempotent
+                             else self._never_reached(e))
+                if not retryable or attempt >= self.connect_retries:
                     break
-                if attempt < self.connect_retries:
-                    time.sleep(self.backoff_s * (2 ** attempt))
+                time.sleep(self.backoff_s * (2 ** attempt))
         raise ServeError(f"cannot reach daemon at {self.url}: {last}",
                          status=0) from last
 
     # ----------------------------- endpoints -----------------------------
 
-    def healthz(self) -> dict:
-        return self._request("GET", "/healthz")
+    def healthz(self, *, timeout_s: float | None = None) -> dict:
+        return self._request("GET", "/healthz", timeout_s=timeout_s)
 
-    def stats(self) -> dict:
-        return self._request("GET", "/stats")
+    def stats(self, *, timeout_s: float | None = None) -> dict:
+        return self._request("GET", "/stats", timeout_s=timeout_s)
 
     def wait_ready(self, timeout_s: float = 30.0,
                    poll_s: float = 0.1) -> dict:
@@ -135,7 +211,8 @@ class ServeClient:
                 estimator="roofline", topology="auto",
                 slicer: str = "linear", fidelity: str | None = None,
                 overlap: bool = False, straggler_factor: float = 1.0,
-                compression: float = 1.0) -> dict:
+                compression: float = 1.0,
+                timeout_s: float | None = None) -> dict:
         """One grid point; returns the result row.  ``workload`` is a
         preloaded name or a workload-spec dict carrying its own source;
         ``estimator``/``topology`` are kind names or spec dicts."""
@@ -146,16 +223,21 @@ class ServeClient:
                 "compression": compression}
         if fidelity:
             body["fidelity"] = fidelity
-        return self._request("POST", "/predict", body)
+        return self._request("POST", "/predict", body, timeout_s=timeout_s)
 
     def campaign(self, *, spec: dict | None = None,
                  spec_path: str | None = None, executor: str = "thread",
                  schedule: str = "locality",
-                 max_workers: int | None = None) -> CampaignStream:
+                 max_workers: int | None = None,
+                 resume_rows: list[dict] | None = None,
+                 retries: int | None = None,
+                 timeout_s: float | None = None) -> CampaignStream:
         """Run a campaign on the daemon; returns a :class:`CampaignStream`
         yielding result rows as jobs finish.  ``spec`` is an inline
         campaign dict; ``spec_path`` a spec file path *on the daemon's
-        filesystem* (they are localhost peers)."""
+        filesystem* (they are localhost peers).  ``resume_rows`` replays
+        a partial prior run server-side (trusted rows are not
+        re-streamed); ``retries`` re-runs evaluate failures."""
         body: dict = {"executor": executor, "schedule": schedule}
         if spec is not None:
             body["spec"] = spec
@@ -163,12 +245,18 @@ class ServeClient:
             body["spec_path"] = spec_path
         if max_workers is not None:
             body["max_workers"] = max_workers
-        resp = self._request("POST", "/campaign", body, stream=True)
+        if resume_rows is not None:
+            body["resume_rows"] = resume_rows
+        if retries is not None:
+            body["retries"] = retries
+        resp = self._request("POST", "/campaign", body, stream=True,
+                             timeout_s=timeout_s)
         return CampaignStream(resp)
 
     def report(self, spec_path: str, *, check: bool = False,
                tolerance: float | None = None, executor: str = "thread",
-               rows: list[dict] | None = None) -> dict:
+               rows: list[dict] | None = None,
+               timeout_s: float | None = None) -> dict:
         """Campaign + evaluation report (optionally golden-checked) in
         one round trip."""
         body: dict = {"spec_path": spec_path, "executor": executor}
@@ -178,7 +266,7 @@ class ServeClient:
             body["tolerance"] = tolerance
         if rows is not None:
             body["rows"] = rows
-        return self._request("POST", "/report", body)
+        return self._request("POST", "/report", body, timeout_s=timeout_s)
 
     def shutdown(self) -> dict:
         """Ask the daemon to drain and stop (graceful, like SIGTERM)."""

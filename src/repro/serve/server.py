@@ -50,6 +50,7 @@ from urllib.parse import urlsplit
 
 from ..campaign.spec import (SLICER_NAMES, CampaignSpec, EstimatorSpec,
                              JobSpec, TopologySpec, WorkloadSpec)
+from . import faults
 
 DEFAULT_PORT = 8733
 
@@ -94,7 +95,8 @@ class PredictionService:
         self._predict = {"served": 0, "coalesced": 0, "cache_hits": 0,
                          "cache_misses": 0}
         self._campaign = {"served": 0, "rows": 0, "cache_hits": 0,
-                          "cache_misses": 0, "duplicate_cold_misses": 0}
+                          "cache_misses": 0, "duplicate_cold_misses": 0,
+                          "resumed_rows": 0, "retried_rows": 0}
         self._evaluated_keys: set[str] = set()
         #: name -> WorkloadSpec it was materialized from (identity memo:
         #: an unchanged re-registration skips the rebuild entirely)
@@ -232,7 +234,7 @@ class PredictionService:
                 predict["cache_misses"] - len(self._evaluated_keys))
             campaign = dict(self._campaign)
             requests = dict(self._requests)
-        return {
+        out = {
             "uptime_s": round(time.monotonic() - self._mono0, 3),
             "draining": self.draining,
             "requests": requests,
@@ -246,6 +248,9 @@ class PredictionService:
             },
             "cache": self.session.cache_store.stats_dict(),
         }
+        if faults.active():   # test-only; absent in production stats
+            out["faults"] = faults.stats()
+        return out
 
     def predict(self, body: dict) -> dict:
         """One grid point against the warm store, coalesced with any
@@ -323,6 +328,18 @@ class PredictionService:
         if opts["schedule"] not in SCHEDULES:
             raise BadRequest(f"schedule {opts['schedule']!r} "
                              f"not in {SCHEDULES}")
+        if "resume_rows" in body:
+            if not isinstance(body["resume_rows"], list) or not all(
+                    isinstance(r, dict) for r in body["resume_rows"]):
+                raise BadRequest("'resume_rows' must be a list of result "
+                                 "rows (a partial run's results.jsonl)")
+            opts["resume_rows"] = body["resume_rows"]
+        if "retries" in body:
+            try:
+                opts["retries"] = max(0, int(body["retries"]))
+            except (TypeError, ValueError) as e:
+                raise BadRequest(
+                    f"'retries' must be an integer: {e}") from e
         return spec, opts
 
     def run_campaign(self, spec: CampaignSpec, opts: dict, on_row=None):
@@ -337,7 +354,9 @@ class PredictionService:
             schedule=opts.get("schedule", "locality"),
             cache=self.session.cache_store,
             cache_path=self.session.cache_path,
-            plan_store=self.plans, on_row=on_row, session=self.session)
+            plan_store=self.plans, on_row=on_row, session=self.session,
+            resume_rows=opts.get("resume_rows"),
+            retries=opts.get("retries", 0))
         with self._lock:
             self._campaign["served"] += 1
             self._campaign["rows"] += len(result.rows)
@@ -348,6 +367,8 @@ class PredictionService:
             # keeps this 0 within a run)
             self._campaign["duplicate_cold_misses"] += max(
                 0, result.cache["misses"] - result.cache["new_entries"])
+            self._campaign["resumed_rows"] += result.resumed_rows
+            self._campaign["retried_rows"] += result.retried_rows
         return result
 
     def campaign(self, body: dict, on_row=None):
@@ -525,9 +546,17 @@ def _make_handler(server: PredictionServer):
             path = urlsplit(self.path).path
             if path == "/shutdown":
                 service._count("shutdown")
+                # hold an in-flight slot across the acknowledgement so
+                # the drain (and then the process exit behind it) cannot
+                # win the race against this response reaching the client
+                with server._cv:
+                    server._inflight += 1
                 threading.Thread(target=server.drain, daemon=True,
                                  name="repro-serve-drain").start()
-                self._json(200, {"draining": True}, close=True)
+                try:
+                    self._json(200, {"draining": True}, close=True)
+                finally:
+                    server.request_finished()
                 return
             if not server.request_started():
                 self._json(503, {"error": "draining: server is "
@@ -566,12 +595,39 @@ def _make_handler(server: PredictionServer):
             self.close_connection = True
             self.end_headers()
             wlock = threading.Lock()
+            dead = [False]    # client gone: keep running, stop writing
+
+            def _reset_connection() -> None:
+                """Hard-close mid-stream (fault op 'reset'): the client
+                sees EOF with no summary line — exactly what a worker
+                crash looks like from outside."""
+                import socket as _socket
+                dead[0] = True
+                try:
+                    self.connection.shutdown(_socket.SHUT_RDWR)
+                except OSError:
+                    pass
 
             def on_row(row: dict) -> None:
                 line = (json.dumps(row) + "\n").encode()
                 with wlock:
-                    self.wfile.write(line)
-                    self.wfile.flush()
+                    if dead[0]:
+                        return
+                    try:
+                        self.wfile.write(line)
+                        self.wfile.flush()
+                    except OSError:
+                        # the client disconnected mid-stream; finish the
+                        # campaign anyway — every remaining row still
+                        # lands in the shared store, so the client's
+                        # retry (or a fleet redispatch) replays warm
+                        dead[0] = True
+                        return
+                if faults.active():
+                    f = faults.fire("stream", job_id=row.get("job_id"))
+                    if f is not None and f.op == "reset":
+                        with wlock:
+                            _reset_connection()
 
             try:
                 result = service.run_campaign(spec, opts, on_row=on_row)
@@ -580,6 +636,10 @@ def _make_handler(server: PredictionServer):
                 final = {"event": "error",
                          "error": f"{type(e).__name__}: {e}"}
             with wlock:
-                self.wfile.write((json.dumps(final) + "\n").encode())
+                if not dead[0]:
+                    try:
+                        self.wfile.write((json.dumps(final) + "\n").encode())
+                    except OSError:
+                        dead[0] = True
 
     return Handler

@@ -1,0 +1,556 @@
+"""Fault tolerance: the seeded fault-injection harness, campaign error
+taxonomy / retries / resume, crash recovery across process kills and
+torn cache appends, the client's timeout/retry/deadline contract, and
+the serve fleet's routing, breaker, and supervision."""
+import json
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.campaign import CampaignSpec, run_campaign
+from repro.campaign.runner import load_jsonl
+from repro.serve import faults
+from repro.serve.client import (TIMEOUT_HEADER, ServeClient, ServeError)
+from repro.serve.faults import FaultInjected, FaultPlan
+from repro.serve.fleet import _Breaker, request_class, route_index
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_faults():
+    """Every test leaves the process fault-free."""
+    yield
+    for var in (faults.ENV_PLAN, faults.ENV_WORKER, faults.ENV_GENERATION):
+        os.environ.pop(var, None)
+    faults.install(None)
+
+
+def gemm_spec(sizes=(64, 96), systems=("a100",)) -> CampaignSpec:
+    """A small pure-python grid (len(sizes) x len(systems) roofline@raw
+    jobs) that needs no files and runs in milliseconds."""
+    return CampaignSpec.from_dict({
+        "name": "robust-t",
+        "workloads": [{"name": f"g{n}", "fidelity": "raw",
+                       "gemm": {"m": n, "n": n, "k": n, "dtype": "bf16"}}
+                      for n in sizes],
+        "systems": list(systems),
+        "estimators": [{"kind": "roofline"}],
+        "slicers": ["linear"],
+    })
+
+
+# ------------------------------ fault plans ------------------------------
+
+
+class TestFaultPlan:
+    def test_at_range_is_seed_deterministic(self):
+        doc = {"seed": 42, "faults": [
+            {"site": "evaluate", "op": "error", "at": [1, 100]}]}
+        a = FaultPlan(doc).faults[0].at
+        b = FaultPlan(doc).faults[0].at
+        assert a == b and 1 <= a <= 100
+
+    def test_unknown_site_and_op_rejected(self):
+        with pytest.raises(ValueError, match="unknown site"):
+            FaultPlan({"faults": [{"site": "nope", "op": "error"}]})
+        with pytest.raises(ValueError, match="unknown op"):
+            FaultPlan({"faults": [{"site": "evaluate", "op": "explode"}]})
+
+    def test_fires_at_counter_value_times_bounded(self):
+        p = FaultPlan({"faults": [
+            {"site": "evaluate", "op": "error", "at": 2}]})
+        assert p.fire("evaluate") is None          # counter 1
+        assert p.fire("evaluate").op == "error"    # counter 2: fires
+        assert p.fire("evaluate") is None          # times=1 exhausted
+        assert p.counters["evaluate"] == 3
+
+    def test_worker_and_generation_filters(self):
+        doc = {"faults": [
+            {"site": "evaluate", "op": "error", "at": 1, "worker": 1}]}
+        assert FaultPlan(doc, worker=0).fire("evaluate") is None
+        assert FaultPlan(doc, worker=1).fire("evaluate") is not None
+        # generation defaults to 0: a restarted worker (generation 1)
+        # must NOT replay its predecessor's faults
+        doc = {"faults": [{"site": "evaluate", "op": "error", "at": 1}]}
+        assert FaultPlan(doc, generation=1).fire("evaluate") is None
+        assert FaultPlan(doc, generation=0).fire("evaluate") is not None
+
+    def test_context_match_filters(self):
+        p = FaultPlan({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1,
+             "workload": "g64"}]})
+        assert p.fire("evaluate", workload="g96") is None
+        p2 = FaultPlan({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1,
+             "workload": "g64"}]})
+        assert p2.fire("evaluate", workload="g64") is not None
+
+    def test_trip_error_raises_fault_injected(self):
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1}]})
+        with pytest.raises(FaultInjected, match="site=evaluate"):
+            faults.trip("evaluate", workload="w")
+
+    def test_env_round_trip_and_reresolution(self, monkeypatch):
+        assert not faults.active()
+        doc = {"faults": [{"site": "stream", "op": "reset", "at": 9}]}
+        monkeypatch.setenv(faults.ENV_PLAN, json.dumps(doc))
+        monkeypatch.setenv(faults.ENV_WORKER, "3")
+        monkeypatch.setenv(faults.ENV_GENERATION, "2")
+        assert faults.active()
+        p = faults.plan()
+        assert p.worker == 3 and p.generation == 2
+        assert p.faults[0].site == "stream"
+        monkeypatch.delenv(faults.ENV_PLAN)
+        assert not faults.active()
+
+    def test_env_accepts_plan_file(self, monkeypatch, tmp_path):
+        path = tmp_path / "plan.json"
+        path.write_text(json.dumps(
+            {"faults": [{"site": "evaluate", "op": "hang", "at": 1,
+                         "seconds": 0.01}]}))
+        monkeypatch.setenv(faults.ENV_PLAN, str(path))
+        assert faults.active()
+        assert faults.plan().faults[0].seconds == 0.01
+
+    def test_stats_reports_counters_and_fired(self):
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 2}]})
+        faults.fire("evaluate", workload="a")
+        with pytest.raises(FaultInjected):
+            faults.trip("evaluate", workload="b")
+        st = faults.stats()
+        assert st["counters"] == {"evaluate": 2}
+        assert st["fired"] == [{"site": "evaluate", "op": "error",
+                                "at": 2, "workload": "b"}]
+
+
+# ------------------------ taxonomy, retries, resume ------------------------
+
+
+class TestErrorTaxonomy:
+    def test_injected_evaluate_error_row(self):
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1,
+             "workload": "g64"}]})
+        res = run_campaign(gemm_spec(), executor="serial")
+        bad = [r for r in res.rows if "error" in r]
+        assert len(bad) == 1
+        assert bad[0]["error_type"] == "evaluate"
+        assert "FaultInjected" in bad[0]["error"]
+        assert res.summary["errors_by_type"] == {"evaluate": 1}
+        assert res.summary["num_failed"] == 1
+
+    def test_plan_failure_is_plan_type(self):
+        # a provided in-memory workload with no IR text fails in the
+        # plan phase (deterministic; retries must not touch it)
+        from repro.core.pipeline import Workload
+        spec = CampaignSpec.from_dict({
+            "name": "t",
+            "workloads": [{"name": "bad", "fidelity": "raw"}],
+            "systems": ["a100"], "estimators": [{"kind": "roofline"}],
+            "slicers": ["linear"]}, provided={"bad"})
+        res = run_campaign(spec, executor="serial", retries=1,
+                           workloads={"bad": Workload(name="bad")})
+        assert all(r["error_type"] == "plan" for r in res.rows)
+        assert "no raw text" in res.rows[0]["error"]
+        assert res.summary["errors_by_type"] == {"plan": 1}
+        assert res.retried_rows == 0    # plan errors are not retried
+
+    def test_worker_sigkill_yields_transport_rows(self, monkeypatch,
+                                                  tmp_path):
+        """A SIGKILLed process-pool worker must not abort the campaign:
+        every unfinished job gets a resumable transport error row."""
+        monkeypatch.setenv(faults.ENV_PLAN, json.dumps(
+            {"faults": [{"site": "evaluate", "op": "kill", "at": 1,
+                         "times": 99}]}))
+        out = str(tmp_path / "out")
+        res = run_campaign(gemm_spec(sizes=(64, 96, 128, 160)),
+                           executor="process", max_workers=2,
+                           out_dir=out)
+        assert len(res.rows) == 4          # no job silently vanished
+        kinds = {r.get("error_type") for r in res.rows}
+        assert kinds == {"transport"}
+        assert res.summary["errors_by_type"] == {"transport": 4}
+        # and the artifact on disk is parseable, ready for --resume
+        rows = load_jsonl(os.path.join(out, "results.jsonl"))
+        assert len(rows) == 4
+
+
+class TestRetries:
+    def test_retry_absorbs_one_shot_evaluate_error(self):
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1}]})
+        res = run_campaign(gemm_spec(), executor="serial", retries=1)
+        assert res.summary["num_failed"] == 0
+        assert res.retried_rows == 1
+        assert res.summary["retries"] == {"configured": 1,
+                                          "rows_retried": 1}
+
+    def test_no_retry_by_default(self):
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1}]})
+        res = run_campaign(gemm_spec(), executor="serial")
+        assert res.summary["num_failed"] == 1
+        assert "retries" not in res.summary
+
+    def test_retries_match_clean_run_thread_executor(self):
+        clean = run_campaign(gemm_spec(), executor="serial")
+        faults.install({"faults": [
+            {"site": "evaluate", "op": "error", "at": 1}]})
+        res = run_campaign(gemm_spec(), executor="thread", retries=2)
+        assert res.summary["num_failed"] == 0
+        t = {r["job_id"]: r["step_time_s"] for r in res.ok_rows}
+        tc = {r["job_id"]: r["step_time_s"] for r in clean.ok_rows}
+        assert t == tc
+
+
+class TestResume:
+    def test_resume_replays_trusted_rows_identically(self):
+        clean = run_campaign(gemm_spec(sizes=(64, 96, 128)),
+                             executor="serial")
+        partial = clean.rows[:2]
+        streamed = []
+        res = run_campaign(gemm_spec(sizes=(64, 96, 128)),
+                          executor="serial", resume_rows=partial,
+                          on_row=streamed.append)
+        assert res.resumed_rows == 2
+        assert res.summary["resume"]["resumed"] == 2
+        assert res.summary["resume"]["missing"] == 1
+        t = {r["job_id"]: r["step_time_s"] for r in res.rows}
+        tc = {r["job_id"]: r["step_time_s"] for r in clean.rows}
+        assert t == tc
+        # replayed rows are tagged and NOT re-streamed to on_row
+        tagged = [r for r in res.rows if r.get("resumed")]
+        assert len(tagged) == 2
+        assert {r["job_id"] for r in streamed} == {
+            r["job_id"] for r in res.rows} - {
+            r["job_id"] for r in tagged}
+
+    def test_error_rows_are_rerun_and_counted_by_type(self):
+        clean = run_campaign(gemm_spec(), executor="serial")
+        broken = [dict(r) for r in clean.rows]
+        broken[0] = {**broken[0], "error": "Boom: injected",
+                     "error_type": "evaluate"}
+        broken[0].pop("step_time_s", None)
+        res = run_campaign(gemm_spec(), executor="serial",
+                           resume_rows=broken)
+        rep = res.summary["resume"]
+        assert rep["rerun_errors"] == 1
+        assert rep["rerun_errors_by_type"] == {"evaluate": 1}
+        assert res.summary["num_failed"] == 0
+
+    def test_stale_rows_with_changed_axes_are_rerun(self):
+        clean = run_campaign(gemm_spec(), executor="serial")
+        stale = [dict(r) for r in clean.rows]
+        stale[1]["system"] = "h100"     # no longer matches the grid
+        res = run_campaign(gemm_spec(), executor="serial",
+                           resume_rows=stale)
+        assert res.summary["resume"]["stale"] == 1
+        assert res.summary["num_failed"] == 0
+
+
+class TestCrashRecovery:
+    def test_sigkill_then_resume_reproduces_clean_run(self, monkeypatch,
+                                                      tmp_path):
+        """Satellite: SIGKILL a process-executor worker mid-campaign;
+        results.jsonl stays parseable, the shared cache self-heals, and
+        --resume completes the grid identically to an uninterrupted
+        run."""
+        cache = str(tmp_path / "hcr.jsonl")
+        out = str(tmp_path / "out")
+        spec = gemm_spec(sizes=(64, 96, 128, 160))
+        monkeypatch.setenv(faults.ENV_PLAN, json.dumps(
+            {"faults": [{"site": "evaluate", "op": "kill", "at": 2,
+                         "times": 99}]}))
+        res = run_campaign(spec, executor="process", max_workers=2,
+                           out_dir=out, cache_path=cache)
+        assert res.summary["num_failed"] >= 1
+        monkeypatch.delenv(faults.ENV_PLAN)
+        faults.install(None)
+
+        partial = load_jsonl(os.path.join(out, "results.jsonl"))
+        assert 0 < len(partial) == 4    # every job accounted for
+        # the cache (possibly torn by the dead writer) must self-heal
+        from repro.core.estimators.cache import PersistentCache
+        healed = PersistentCache(cache)
+        assert healed.stats_dict()["entries"] >= 0    # loads cleanly
+
+        resumed = run_campaign(spec, executor="process", max_workers=2,
+                               out_dir=out, cache_path=cache,
+                               resume_rows=partial)
+        assert resumed.summary["num_failed"] == 0
+        clean = run_campaign(spec, executor="serial")
+        t = {r["job_id"]: r["step_time_s"] for r in resumed.rows}
+        tc = {r["job_id"]: r["step_time_s"] for r in clean.rows}
+        assert t == tc
+
+    def test_torn_cache_append_heals_without_losing_predictions(
+            self, tmp_path):
+        """op 'torn' chops the last record mid-line and skips the index
+        step; the next open must recover every intact entry and the
+        campaign's predictions must be unaffected."""
+        cache = str(tmp_path / "hcr.jsonl")
+        faults.install({"faults": [
+            {"site": "cache_append", "op": "torn", "at": 1}]})
+        res = run_campaign(gemm_spec(), executor="serial",
+                          cache_path=cache)
+        assert res.summary["num_failed"] == 0
+        faults.install(None)
+        from repro.core.estimators.cache import PersistentCache
+        healed = PersistentCache(cache)
+        warm = run_campaign(gemm_spec(), executor="serial",
+                            cache_path=cache)
+        assert warm.summary["num_failed"] == 0
+        t = {r["job_id"]: r["step_time_s"] for r in warm.rows}
+        tc = {r["job_id"]: r["step_time_s"] for r in res.rows}
+        assert t == tc
+        assert healed.stats_dict()["entries"] >= 0
+
+
+# --------------------------- client transport ---------------------------
+
+
+class _MiniServer:
+    """A raw-socket stand-in daemon with scripted per-connection
+    behavior: 'close' (accept then slam shut), 'stall' (accept and never
+    answer), 'ok' (answer a canned JSON 200).  Records every connection
+    and the raw bytes of 'ok' requests."""
+
+    BODY = b'{"status": "ok"}'
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.connections = 0
+        self.requests: list[bytes] = []
+        self._held: list[socket.socket] = []  # stalled conns, kept open
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(8)
+        self.url = "http://127.0.0.1:%d" % self.sock.getsockname()[1]
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        while self.script:
+            mode = self.script.pop(0)
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            self.connections += 1
+            if mode == "close":
+                conn.close()
+                continue
+            if mode == "stall":
+                self._held.append(conn)   # open, never answered
+                continue
+            raw = conn.recv(65536)
+            self.requests.append(raw)
+            conn.sendall(b"HTTP/1.1 200 OK\r\n"
+                         b"Content-Type: application/json\r\n"
+                         b"Content-Length: %d\r\n\r\n%s"
+                         % (len(self.BODY), self.BODY))
+            conn.close()
+
+    def close(self):
+        self.sock.close()
+        for conn in self._held:
+            conn.close()
+
+
+class TestClientTransport:
+    def test_get_retries_through_transient_reset(self):
+        srv = _MiniServer(["close", "ok"])
+        try:
+            c = ServeClient(srv.url, timeout_s=5, connect_retries=3,
+                            backoff_s=0.01)
+            assert c.healthz() == {"status": "ok"}
+            assert srv.connections == 2
+        finally:
+            srv.close()
+
+    def test_post_is_not_retried_on_midflight_reset(self):
+        srv = _MiniServer(["close", "ok"])
+        try:
+            c = ServeClient(srv.url, timeout_s=5, connect_retries=3,
+                            backoff_s=0.01)
+            with pytest.raises(ServeError):
+                c.predict("w")
+            # one connection only: a reset POST may have half-executed,
+            # so the client must NOT blind-retry it
+            assert srv.connections == 1
+        finally:
+            srv.close()
+
+    def test_get_timeout_bounded_and_retried(self):
+        srv = _MiniServer(["stall", "ok"])
+        try:
+            c = ServeClient(srv.url, timeout_s=0.2, connect_retries=2,
+                            backoff_s=0.01)
+            t0 = time.monotonic()
+            assert c.healthz() == {"status": "ok"}
+            assert time.monotonic() - t0 < 5.0
+        finally:
+            srv.close()
+
+    def test_deadline_caps_total_retry_time(self):
+        srv = _MiniServer(["stall", "stall", "stall"])
+        try:
+            c = ServeClient(srv.url, timeout_s=10, connect_retries=5,
+                            backoff_s=0.01, deadline_s=0.4)
+            t0 = time.monotonic()
+            with pytest.raises(ServeError, match="deadline"):
+                c.healthz()
+            assert time.monotonic() - t0 < 5.0
+        finally:
+            srv.close()
+
+    def test_timeout_header_advertises_budget(self):
+        srv = _MiniServer(["ok"])
+        try:
+            c = ServeClient(srv.url, timeout_s=7.5)
+            c.healthz()
+            assert TIMEOUT_HEADER.lower().encode() in \
+                srv.requests[0].lower()
+            assert b"7.5" in srv.requests[0]
+        finally:
+            srv.close()
+
+
+# ------------------------------- fleet -------------------------------
+
+
+class TestFleetRouting:
+    def test_route_index_stable_and_in_range(self):
+        cls = ("predict", "g64", "a100", "roofline")
+        assert route_index(cls, 4) == route_index(cls, 4)
+        for n in (1, 2, 3, 8):
+            assert 0 <= route_index(cls, n) < n
+
+    def test_distinct_classes_spread(self):
+        idx = {route_index(("predict", f"g{n}", "a100", "roofline"), 8)
+               for n in range(64, 64 + 16)}
+        assert len(idx) > 1     # hashing, not constant
+
+    def test_request_class_shapes(self):
+        assert request_class("/predict", {
+            "workload": "g64", "system": "a100",
+            "estimator": "roofline"}) == \
+            ("predict", "g64", "a100", "roofline")
+        assert request_class("/predict", {
+            "workload": {"name": "w", "gemm": {}},
+            "estimator": {"kind": "systolic"}}) == \
+            ("predict", "w", "a100", "systolic")
+        assert request_class("/campaign", {
+            "spec": {"name": "fig10"}}) == ("campaign", "fig10")
+        assert request_class("/campaign", {
+            "spec_path": "specs/x.json"}) == ("campaign", "specs/x.json")
+
+
+class TestBreaker:
+    def test_opens_after_threshold_consecutive_deaths(self):
+        b = _Breaker(threshold=3, cooldown_s=60)
+        cls = ("predict", "w")
+        assert not b.record_death(cls)
+        assert not b.record_death(cls)
+        assert b.record_death(cls)
+        assert b.is_open(cls)
+        assert b.open_classes() == [["predict", "w"]]
+
+    def test_success_resets_the_count(self):
+        b = _Breaker(threshold=2, cooldown_s=60)
+        cls = ("predict", "w")
+        b.record_death(cls)
+        b.record_success(cls)
+        assert not b.record_death(cls)      # count restarted
+        assert not b.is_open(cls)
+
+    def test_cooldown_expiry_closes(self):
+        b = _Breaker(threshold=1, cooldown_s=0.05)
+        cls = ("campaign", "s")
+        assert b.record_death(cls)
+        assert b.is_open(cls)
+        time.sleep(0.08)
+        assert not b.is_open(cls)
+
+
+class TestStreamFault:
+    def test_midstream_reset_breaks_client_but_not_campaign(self):
+        """A connection reset mid-NDJSON-stream surfaces as ServeError
+        with rows_seen intact (enough to resume); the server finishes
+        the campaign anyway, warming the shared store."""
+        from repro.serve.server import PredictionServer, PredictionService
+        faults.install({"faults": [
+            {"site": "stream", "op": "reset", "at": 2}]})
+        service = PredictionService()
+        server = PredictionServer(service, port=0).start()
+        try:
+            client = ServeClient(server.url, connect_retries=0)
+            spec = {"name": "t", "workloads": [
+                {"name": f"g{n}", "fidelity": "raw",
+                 "gemm": {"m": n, "n": n, "k": n, "dtype": "bf16"}}
+                for n in (64, 96, 128)],
+                "systems": ["a100"],
+                "estimators": [{"kind": "roofline"}],
+                "slicers": ["linear"]}
+            stream = client.campaign(spec=spec, executor="serial")
+            with pytest.raises(ServeError, match="stream"):
+                list(stream)
+            assert stream.rows_seen == 2
+            # the campaign itself completed server-side
+            deadline = time.monotonic() + 10
+            while (service._campaign["served"] < 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.02)
+            assert service._campaign["served"] == 1
+            assert service._campaign["rows"] == 3
+        finally:
+            faults.install(None)
+            server.drain(timeout_s=10)
+
+
+@pytest.mark.slow
+class TestFleetIntegration:
+    @pytest.fixture()
+    def fleet(self, tmp_path):
+        from repro.serve.fleet import FleetSupervisor
+        sup = FleetSupervisor(workers=2,
+                              cache_path=str(tmp_path / "hcr.jsonl"),
+                              backoff_s=0.05, boot_timeout_s=60)
+        sup.start()
+        yield sup
+        if not sup.stopped.is_set():
+            sup.drain(timeout_s=15)
+
+    def test_predict_routes_and_aggregates(self, fleet):
+        client = ServeClient(fleet.url, timeout_s=60)
+        client.wait_ready(timeout_s=30)
+        body = {"name": "w64", "fidelity": "raw",
+                "gemm": {"m": 64, "n": 64, "k": 64, "dtype": "bf16"}}
+        row = client.predict(body)
+        assert row["step_time_s"] > 0 and "degraded" not in row
+        st = client.stats()
+        assert st["fleet"]["workers"] == 2
+        assert st["fleet"]["restarts"] == 0
+        assert st["totals"]["predict_served"] == 1
+        assert client.healthz() == {"status": "ok", "workers": 2,
+                                    "alive": 2}
+
+    def test_monitor_restarts_killed_worker(self, fleet):
+        client = ServeClient(fleet.url, timeout_s=60)
+        client.wait_ready(timeout_s=30)
+        fleet._workers[0].proc.kill()
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            st = client.stats()["fleet"]
+            if st["restarts"] >= 1 and st["generations"][0] == 1:
+                break
+            time.sleep(0.1)
+        else:
+            pytest.fail(f"worker never restarted: {st}")
+        assert client.healthz()["alive"] == 2

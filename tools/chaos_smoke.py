@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""CI chaos smoke: the fleet under a seeded fault plan.
+
+The robustness claim is not "no worker ever dies" — it is "a worker
+death changes *nothing observable* except the fleet's restart counters".
+This job proves it twice, deterministically:
+
+  1. **Fleet redispatch** — boot ``python -m repro.serve --workers 2``
+     with a seeded fault plan that SIGKILLs the worker serving the
+     Fig 10 campaign right after its 5th streamed row, plus one
+     injected estimator exception on the redispatch target (absorbed by
+     ``retries=1``).  The streamed campaign must still be
+     golden-identical (``check_rows`` max drift 0.0, all 24 unique
+     rows), ``/stats`` must show the restart/redispatch/resume/retry
+     counters — and zero duplicate cold misses: the rows the dead
+     worker already flushed were write-through to the shared store, so
+     the survivor resumes warm instead of recomputing.
+  2. **CLI crash + ``--resume``** — run the same campaign locally with
+     a fault plan that kills the whole process at row 5 (exit 137,
+     partial ``results.jsonl`` on disk), then re-run with ``--resume``:
+     the completed grid must be golden-identical too, replaying the 5
+     surviving rows instead of recomputing them.
+
+Deterministic counters land in ``BENCH_chaos.json`` and are pinned in
+``specs/bench_baselines.json`` via ``tools/bench_check.py``.  Run from
+the repo root::
+
+    PYTHONPATH=src python tools/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPEC = os.path.join(REPO, "specs", "fig10_gemm.json")
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.campaign.report import check_rows, golden_path, load_json  # noqa: E402
+from repro.serve.client import ServeClient  # noqa: E402
+from repro.serve.faults import KILL_STATUS  # noqa: E402
+from repro.serve.fleet import request_class, route_index  # noqa: E402
+
+WORKERS = 2
+KILL_AT_ROW = 5
+GRID = 24   # fig10: 6 workloads x 2 systems x 2 estimators
+
+BENCH = {}
+
+
+def fail(msg: str) -> None:
+    print(f"CHAOS-SMOKE FAILURE: {msg}")
+    raise SystemExit(1)
+
+
+def golden_drift(rows: list[dict], campaign: str) -> float:
+    """Max drift of ``rows`` vs the checked-in golden snapshot (fails
+    the run on any mismatch)."""
+    golden = load_json(golden_path(SPEC, campaign))
+    if golden is None:
+        fail(f"no golden snapshot for {campaign}")
+    check = check_rows(golden, rows, tolerance=0.0)
+    if check["failures"]:
+        for f in check["failures"]:
+            print(f"  golden diff: {f}")
+        fail(f"{len(check['failures'])} row(s) deviate from golden "
+             "after fault injection")
+    return check.get("max_drift", 0.0)
+
+
+def fleet_under_fire(tmp: str) -> None:
+    """Part 1: kill the campaign's worker mid-stream; the fleet must
+    redispatch, the output must be golden-identical."""
+    cls = request_class("/campaign", {"spec_path": SPEC})
+    victim = route_index(cls, WORKERS)          # who serves the campaign
+    bystander = (victim + 1) % WORKERS          # who inherits it
+    plan = {"seed": 2108, "faults": [
+        # SIGKILL the serving worker right after its 5th streamed row
+        {"site": "campaign_row", "op": "kill", "at": KILL_AT_ROW,
+         "worker": victim, "generation": 0},
+        # and greet the redispatch target with one estimator exception,
+        # absorbed by retries=1
+        {"site": "evaluate", "op": "error", "at": 1, "times": 1,
+         "worker": bystander, "generation": 0},
+    ]}
+    plan_path = os.path.join(tmp, "fleet_plan.json")
+    with open(plan_path, "w") as f:
+        json.dump(plan, f)
+    print(f"fleet: campaign routes to worker {victim}; killing it at "
+          f"row {KILL_AT_ROW}, injecting 1 estimator error on worker "
+          f"{bystander}")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    fleet = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve", "--port", "0",
+         "--workers", str(WORKERS), "--fault-plan", plan_path,
+         "--cache", os.path.join(tmp, "hcr.jsonl"), "--preload", SPEC],
+        cwd=REPO, env=env, stdout=subprocess.PIPE, text=True)
+    try:
+        url = json.loads(fleet.stdout.readline())["url"]
+        print(f"fleet up at {url} (pid {fleet.pid}, {WORKERS} workers)")
+        client = ServeClient(url, timeout_s=120)
+        client.wait_ready(timeout_s=60.0)
+
+        rows, summary = client.campaign(spec_path=SPEC, executor="thread",
+                                        retries=1).collect()
+        ids = sorted(r["job_id"] for r in rows)
+        if ids != list(range(GRID)):
+            fail(f"streamed grid incomplete/duplicated: {len(rows)} "
+                 f"rows, {len(set(ids))} unique ids")
+        bad = [r for r in rows if "error" in r]
+        if bad:
+            fail(f"{len(bad)} error row(s) survived redispatch+retry: "
+                 f"{bad[0]}")
+        drift = golden_drift(rows, summary["campaign"])
+        print(f"  campaign: {len(rows)} rows golden-identical "
+              f"(max drift {drift})")
+
+        st = client.stats()
+        fl, totals = st["fleet"], st["totals"]
+        if fl["restarts"] < 1:
+            fail(f"expected >=1 restart, fleet counters: {fl}")
+        if fl["redispatches"] != 1:
+            fail(f"expected exactly 1 redispatch, got "
+                 f"{fl['redispatches']}")
+        if fl["degraded"] != 0:
+            fail(f"nothing should have degraded, got {fl['degraded']}")
+        if totals["duplicate_cold_misses"] != 0:
+            fail(f"duplicate cold misses after redispatch: "
+                 f"{totals['duplicate_cold_misses']} (write-through "
+                 "resume broken)")
+        if totals["resumed_rows"] != KILL_AT_ROW:
+            fail(f"expected {KILL_AT_ROW} resumed rows, got "
+                 f"{totals['resumed_rows']}")
+        if totals["retried_rows"] != 1:
+            fail(f"expected 1 retried row, got {totals['retried_rows']}")
+        print(f"  /stats: restarts={fl['restarts']} "
+              f"redispatches={fl['redispatches']} "
+              f"resumed={totals['resumed_rows']} "
+              f"retried={totals['retried_rows']} "
+              f"duplicate_cold_misses={totals['duplicate_cold_misses']}")
+        BENCH["fleet"] = {
+            "workers": WORKERS,
+            "restarts": fl["restarts"],
+            "worker_deaths": fl["worker_deaths"],
+            "redispatches": fl["redispatches"],
+            "degraded": fl["degraded"],
+            "rows": len(rows),
+            "resumed_rows": totals["resumed_rows"],
+            "retried_rows": totals["retried_rows"],
+            "duplicate_cold_misses": totals["duplicate_cold_misses"],
+            "max_drift": drift,
+        }
+
+        client.shutdown()
+        rc = fleet.wait(timeout=60)
+        if rc != 0:
+            fail(f"fleet exited {rc} after graceful shutdown")
+    finally:
+        if fleet.poll() is None:
+            fleet.terminate()
+            try:
+                fleet.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                fleet.kill()
+
+
+def cli_resume_after_kill(tmp: str) -> None:
+    """Part 2: hard-kill the campaign CLI mid-run, then ``--resume``;
+    the completed artifacts must be golden-identical."""
+    plan = {"seed": 2108, "faults": [
+        {"site": "campaign_row", "op": "kill", "at": KILL_AT_ROW}]}
+    plan_path = os.path.join(tmp, "cli_plan.json")
+    with open(plan_path, "w") as f:
+        json.dump(plan, f)
+    out = os.path.join(tmp, "campaign")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    base = [sys.executable, "-m", "repro.campaign", "run", SPEC,
+            "--out", out, "--executor", "serial", "--quiet",
+            "--cache", os.path.join(tmp, "cli_hcr.jsonl")]
+    rc = subprocess.run(base + ["--fault-plan", plan_path],
+                        cwd=REPO, env=env).returncode
+    if rc != KILL_STATUS:
+        fail(f"faulted run should die with status {KILL_STATUS}, "
+             f"got {rc}")
+    jsonl = os.path.join(out, "results.jsonl")
+    partial = [json.loads(line) for line in open(jsonl)]   # must parse
+    if len(partial) != KILL_AT_ROW:
+        fail(f"expected {KILL_AT_ROW} flushed rows in the partial "
+             f"results.jsonl, found {len(partial)}")
+    print(f"cli: killed at row {KILL_AT_ROW} (exit {rc}), "
+          f"results.jsonl parseable with {len(partial)} rows")
+
+    rc = subprocess.run(base + ["--resume"], cwd=REPO, env=env).returncode
+    if rc != 0:
+        fail(f"--resume run exited {rc}")
+    rows = [json.loads(line) for line in open(jsonl)]
+    ids = sorted(r["job_id"] for r in rows)
+    if ids != list(range(GRID)):
+        fail(f"resumed grid incomplete: {len(rows)} rows")
+    resumed = sum(1 for r in rows if r.get("resumed"))
+    if resumed != KILL_AT_ROW:
+        fail(f"expected {KILL_AT_ROW} replayed rows, got {resumed}")
+    summary = json.load(open(os.path.join(out, "summary.json")))
+    drift = golden_drift(rows, summary["campaign"])
+    print(f"  --resume: grid complete, {resumed} rows replayed, "
+          f"golden-identical (max drift {drift})")
+    BENCH["resume_cli"] = {
+        "exit_status_on_kill": KILL_STATUS,
+        "partial_rows": len(partial),
+        "rows_after_resume": len(rows),
+        "rows_replayed": resumed,
+        "max_drift": drift,
+    }
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory(prefix="chaos-smoke-") as tmp:
+        fleet_under_fire(tmp)
+        cli_resume_after_kill(tmp)
+    bench_path = os.path.join(REPO, "BENCH_chaos.json")
+    with open(bench_path, "w") as f:
+        json.dump(BENCH, f, indent=2)
+    print(f"chaos smoke: all checks passed; counters -> {bench_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
