@@ -236,6 +236,50 @@ def _cache_index_counters() -> dict:
     return out
 
 
+def _learned_accuracy() -> dict:
+    """Learned-tier accuracy on the checked-in golden grid
+    (``specs/learned_fidelity.json``): deterministic fit / extrapolation
+    counters plus the MAPE headline against the recorded reference —
+    the cross-fidelity accuracy row the report prints, as a perf
+    artifact.  Run under serial and process executors with fresh caches
+    so duplicate cold misses stay a pinned zero."""
+    from repro.campaign import CampaignSpec, run_campaign
+    from repro.campaign.report import (build_report, load_json,
+                                       reference_path)
+    from repro.core.estimators import load_model
+
+    spec_path = os.path.join(REPO, "specs", "learned_fidelity.json")
+    model = load_model(os.path.join(
+        REPO, "specs", "models", "learned-gemm-a100.json"))
+    spec = CampaignSpec.from_json(spec_path)
+    results = {}
+    for ex in ("serial", "process"):
+        with tempfile.TemporaryDirectory() as d:
+            results[ex] = run_campaign(
+                spec, executor=ex, max_workers=4,
+                cache_path=os.path.join(d, "hcr.jsonl"))
+        assert results[ex].summary["num_failed"] == 0, \
+            results[ex].summary["failures"]
+    rows = results["serial"].rows
+    learned_rows = [r for r in rows
+                    if r["estimator"].startswith("learned-")]
+    ref = load_json(reference_path(spec_path, spec.name))
+    report = build_report(spec.name, rows, reference=ref)
+    mape = report["accuracy"]["mape_pct"]
+    label = next(k for k in mape if k.startswith("learned-"))
+    return {
+        "entries_fitted": model.meta["entries_fitted"],
+        "families": len(model.families),
+        "learned_rows": len(learned_rows),
+        "extrapolated_predictions": sum(
+            1 for r in learned_rows if r["extrapolated"]),
+        "mape_pct": mape[label]["overall"],
+        "duplicate_cold_misses": (
+            results["process"].cache["misses"]
+            - results["serial"].cache["misses"]),
+    }
+
+
 def main() -> None:
     from repro.campaign.builders import synthesize_gemm_stack
     from repro.core.pipeline import Workload
@@ -269,6 +313,7 @@ def main() -> None:
         "front_ends": _front_end_comparison(),
         "evaluate": _evaluate_comparison(),
         "cache_index": _cache_index_counters(),
+        "learned": _learned_accuracy(),
     }
     path = os.path.join(REPO, "BENCH_campaign.json")
     with open(path, "w") as f:
@@ -296,6 +341,10 @@ def main() -> None:
     ci = report["cache_index"]
     assert ci["warm_hit_scan_bytes"] == 0, report
     assert ci["warm_hit_lock_roundtrips"] == 0, report
+    lr = report["learned"]
+    assert lr["duplicate_cold_misses"] == 0, report
+    assert lr["extrapolated_predictions"] < lr["learned_rows"], report
+    assert lr["mape_pct"] < 15.0, report
 
 
 if __name__ == "__main__":

@@ -114,13 +114,17 @@ def format_table(summary: dict) -> str:
         lines.append(f"  FAILED job {r['job_id']} "
                      f"[{r.get('error_type', 'unknown')}]: {r['error']}")
     if "best" in summary:
+        # _point only carries the axes present in the row — rows from a
+        # reduced grid (e.g. server resume payloads) may omit some
+        def _axes(p: dict) -> str:
+            return " × ".join(str(p.get(k, "—"))
+                              for k in ("workload", "system", "estimator",
+                                        "slicer"))
         b, w = summary["best"], summary["worst"]
         lines.append(
-            f"  best : {b['workload']} × {b['system']} × {b['estimator']}"
-            f" × {b['slicer']} = {b['step_time_s'] * 1e3:.3f} ms")
+            f"  best : {_axes(b)} = {b['step_time_s'] * 1e3:.3f} ms")
         lines.append(
-            f"  worst: {w['workload']} × {w['system']} × {w['estimator']}"
-            f" × {w['slicer']} = {w['step_time_s'] * 1e3:.3f} ms")
+            f"  worst: {_axes(w)} = {w['step_time_s'] * 1e3:.3f} ms")
     for wl, by_est in summary.get("system_ranks", {}).items():
         for est, order in sorted(by_est.items()):
             lines.append(f"  rank [{wl} / {est}]: {' < '.join(order)}")

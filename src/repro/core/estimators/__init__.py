@@ -1,6 +1,8 @@
 from .analytical import RooflineEstimator
 from .base import ComputeEstimator, MixedEstimator
 from .cache import CachedEstimator, CacheStats
+from .learned import (LearnedEstimator, LearnedModel, fit_model, load_model,
+                      region_family, save_model)
 from .profiling import ProfilingEstimator
 from .systolic import PRESETS, SystolicEstimator
 from .table import TableEstimator, load_profile, record_profile, save_profile
@@ -10,4 +12,6 @@ __all__ = [
     "CachedEstimator", "CacheStats", "ProfilingEstimator",
     "SystolicEstimator", "PRESETS",
     "TableEstimator", "load_profile", "record_profile", "save_profile",
+    "LearnedEstimator", "LearnedModel", "fit_model", "save_model",
+    "load_model", "region_family",
 ]

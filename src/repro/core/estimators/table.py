@@ -109,7 +109,13 @@ class TableEstimator(ComputeEstimator):
         if t is not None:
             return t * self.scale
         if self.default is not None:
-            return self.default
+            # scale applies to the default too ("scale rescales every
+            # entry"): a scaled cross-system projection must not serve
+            # unscaled latencies for uncovered fingerprints.  The cache
+            # config digest already covers both fields, so fixed values
+            # can never be served from entries cached under the old
+            # behavior's identical key — the key was always correct.
+            return self.default * self.scale
         raise KeyError(
             f"table estimator ({self.source}): no recorded latency for "
             f"region fingerprint {region.fingerprint!r} "

@@ -167,6 +167,10 @@ class Prediction:
     cache_stats: CacheStats | None = None
     schedule: ScheduleResult | None = None
     breakdown: dict = field(default_factory=dict)
+    #: estimator-reported per-prediction quality fields (a learned-tier
+    #: estimator's uncertainty interval + extrapolation flags); merged
+    #: verbatim into the result row
+    quality: dict | None = None
 
     def to_row(self) -> dict:
         """Flat, JSON/CSV-serializable view (drops the schedule object)."""
@@ -183,6 +187,8 @@ class Prediction:
             "num_comm": self.num_comm,
             "simulation_wall_s": self.simulation_wall_s,
         }
+        if self.quality:
+            row.update(self.quality)
         if self.cache_stats is not None:
             row["cache_hits"] = self.cache_stats.hits
             row["cache_misses"] = self.cache_stats.misses
@@ -320,6 +326,13 @@ class PredictionJob:
         sched = simulate(trace, self.topology, overlap=self.overlap,
                          straggler_factor=self.straggler_factor,
                          compression=self.compression)
+        # optional estimator hook: per-prediction quality fields (the
+        # learned tier's uncertainty interval + extrapolation flags) ride
+        # into the result row.  Queried on the bare estimator — cache
+        # hits don't change what the model knows about its confidence.
+        quality_fn = getattr(self.estimator, "prediction_quality", None)
+        quality = (dict(quality_fn(plan.compute_regions))
+                   if quality_fn is not None else None)
         wall = time.perf_counter() - t0
         return Prediction(
             workload=self.name,
@@ -335,7 +348,8 @@ class PredictionJob:
             simulation_wall_s=wall,
             cache_stats=self.cached.stats if self.cached else None,
             schedule=sched,
-            breakdown=sched.breakdown)
+            breakdown=sched.breakdown,
+            quality=quality)
 
     def run(self) -> Prediction:
         return self.evaluate(self.plan or self.build_plan())

@@ -245,6 +245,7 @@ ESTIMATORS = Registry("estimator", builtins={
     "mixed": "repro.core.estimators.base",
     "profiling": "repro.core.estimators.profiling",
     "table": "repro.core.estimators.table",
+    "learned": "repro.core.estimators.learned",
 })
 
 #: the global topology vocabulary

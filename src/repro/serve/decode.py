@@ -32,6 +32,14 @@ def greedy_decode(cfg: ModelConfig, params, prompt: jax.Array,
                   max_new_tokens: int = 8, max_len: int = 128) -> ServeResult:
     """Greedy generation: prompt [B, S0] -> [B, max_new_tokens]."""
     b, s0 = prompt.shape
+    if s0 + max_new_tokens > max_len:
+        # decode_step writes one KV slot per step via a clamped
+        # dynamic_update_slice — past max_len it would silently
+        # overwrite the last slot instead of failing
+        raise ValueError(
+            f"greedy_decode: prompt length {s0} + max_new_tokens "
+            f"{max_new_tokens} exceeds the KV cache (max_len={max_len}) "
+            "— raise max_len or generate fewer tokens")
     cache = init_params(init_cache_specs(cfg, b, max_len),
                         jax.random.PRNGKey(0))
     step_fn = jax.jit(make_serve_step(cfg))

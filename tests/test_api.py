@@ -305,6 +305,22 @@ class TestTableEstimator:
         est_d = TableEstimator(s.get_system("a100"), {}, default=7e-6)
         assert est_d.get_run_time_estimate(region) == 7e-6
 
+    def test_table_default_is_scaled(self, tmp_path):
+        """Regression: the fallback default must pick up ``scale`` just
+        like recorded entries do (a derated replay table would otherwise
+        mix scaled hits with unscaled misses)."""
+        from repro.core.estimators import TableEstimator
+        s = api.Session()
+        _, plan, _, _ = self._profile(s, tmp_path)
+        region = plan.compute_regions[0]
+        est = TableEstimator(s.get_system("a100"), {}, default=7e-6,
+                             scale=3.0)
+        assert est.get_run_time_estimate(region) == pytest.approx(21e-6)
+        # the cache config key digests both fields, so scaled-default
+        # predictions can never alias an unscaled table's cache entries
+        plain = TableEstimator(s.get_system("a100"), {}, default=7e-6)
+        assert est.cache_config_key != plain.cache_config_key
+
     def test_table_profile_path_relative_to_spec_file(self, tmp_path):
         """A spec-file table estimator resolves its profile against the
         spec's directory, not the CWD — including across the process

@@ -338,6 +338,31 @@ class TestExecution:
 # --------------------------- persistent (H,C,R) cache ----------------------
 
 
+class TestSummaryFormatting:
+    def test_format_table_tolerates_missing_axes(self):
+        """Regression: ``_point`` only carries the axes present in a row
+        (server resume payloads ship reduced grids), so the best/worst
+        lines must render with placeholders instead of raising KeyError."""
+        from repro.campaign.summary import format_table, summarize
+        rows = [{"job_id": 0, "workload": "g", "system": "a100",
+                 "estimator": "roofline", "step_time_s": 1e-3},
+                {"job_id": 1, "workload": "g", "system": "h100-paper",
+                 "estimator": "roofline", "step_time_s": 2e-3}]
+        summary = summarize("reduced", rows)
+        text = format_table(summary)
+        assert "best" in text and "worst" in text
+        assert "—" in text            # placeholder for the absent slicer
+        assert "h100-paper" in text
+
+    def test_format_table_full_axes_unchanged(self):
+        from repro.campaign.summary import format_table, summarize
+        rows = [{"job_id": 0, "workload": "g", "system": "a100",
+                 "estimator": "roofline", "slicer": "linear",
+                 "topology": "a2a", "step_time_s": 1e-3}]
+        text = format_table(summarize("full", rows))
+        assert "g × a100 × roofline × linear" in text
+
+
 class TestPersistentCache:
     def test_second_run_hits_and_is_faster(self, toy_workload, tmp_path):
         """The across-run extension of the paper's §III-B(c) caching

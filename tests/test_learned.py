@@ -1,0 +1,269 @@
+"""Learned cross-system fidelity tier: fit / transfer / uncertainty,
+campaign + serve reachability, and the checked-in golden grid."""
+import json
+import os
+
+import pytest
+
+from repro.campaign.builders import _synthesize_gemm
+from repro.campaign.spec import WorkloadSpec
+from repro.core.catalog import default_registry
+from repro.core.estimators import (LearnedEstimator, MixedEstimator,
+                                   RooflineEstimator, fit_model, load_model,
+                                   record_profile, region_family, save_model)
+from repro.core.estimators.learned import MODEL_VERSION
+from repro.core.pipeline import build_plan
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPEC = os.path.join(REPO, "specs", "learned_fidelity.json")
+
+TRAIN_SIZES = (256, 512, 1024, 2048, 4096)
+#: sizes where both catalog systems are compute-bound, so the linear
+#: model's transfer should track the roofline closely
+COMPUTE_BOUND = (2048, 4096)
+
+
+def _gemm_region(m: int):
+    w = _synthesize_gemm(WorkloadSpec(
+        name=f"g{m}", fidelity="raw",
+        gemm={"m": m, "n": m, "k": m, "dtype": "bf16"}))
+    plan = build_plan(w.program("raw"), name=w.name, fidelity="raw")
+    assert len(plan.compute_regions) == 1
+    return plan.compute_regions[0]
+
+
+@pytest.fixture(scope="module")
+def systems():
+    reg = default_registry()
+    return reg.get("a100"), reg.get("h100-paper")
+
+
+@pytest.fixture(scope="module")
+def fitted(systems):
+    """Model fitted from a roofline-recorded profile on a100."""
+    a100, _ = systems
+    regions = [_gemm_region(m) for m in TRAIN_SIZES]
+    profile = record_profile(regions, RooflineEstimator(a100))
+    model = fit_model(regions, profile, a100,
+                      meta={"source_system": "a100"})
+    return model, regions
+
+
+class TestFit:
+    def test_family_and_entry_counts(self, fitted):
+        model, regions = fitted
+        assert set(model.families) == {"matmul"}
+        assert model.families["matmul"].n_samples == len(TRAIN_SIZES)
+        assert model.meta["entries_fitted"] == len(TRAIN_SIZES)
+        assert all(region_family(r) == "matmul" for r in regions)
+
+    def test_parity_on_source_system(self, fitted, systems):
+        """In-envelope predictions on the recording system track the
+        recorder within the model's own residual spread."""
+        model, _ = fitted
+        a100, _ = systems
+        learned = LearnedEstimator(a100, model)
+        roof = RooflineEstimator(a100)
+        errs = []
+        for m in TRAIN_SIZES[1:]:
+            r = _gemm_region(m)
+            t_l = learned.get_run_time_estimate(r)
+            t_r = roof.get_run_time_estimate(r)
+            errs.append(abs(t_l - t_r) / t_r)
+        assert sum(errs) / len(errs) < 0.10      # MAPE
+        assert max(errs) < 2 * model.families["matmul"].rel_residual_std
+
+    def test_transfer_to_second_system(self, fitted, systems):
+        """Predictions transfer to a system the profile never ran on by
+        rescaling features with the target's catalog constants."""
+        model, _ = fitted
+        _, h100 = systems
+        learned = LearnedEstimator(h100, model)
+        roof = RooflineEstimator(h100)
+        errs = []
+        for m in COMPUTE_BOUND:
+            r = _gemm_region(m)
+            t_l = learned.get_run_time_estimate(r)
+            t_r = roof.get_run_time_estimate(r)
+            errs.append(abs(t_l - t_r) / t_r)
+            # every cross-system prediction is flagged as extrapolation
+            assert learned.predict_with_uncertainty(r)["extrapolated"]
+        assert sum(errs) / len(errs) < 0.05      # MAPE vs direct analytical
+
+    def test_fit_rejects_unmatched_profile(self, fitted, systems):
+        a100, _ = systems
+        _, regions = fitted
+        with pytest.raises(ValueError, match="no profile entry"):
+            fit_model(regions, {"not-a-fp": 1e-6}, a100)
+
+
+class TestUncertainty:
+    def test_interval_brackets_prediction(self, fitted, systems):
+        model, _ = fitted
+        a100, _ = systems
+        p = LearnedEstimator(a100, model).predict_with_uncertainty(
+            _gemm_region(1024))
+        assert 0 <= p["low"] <= p["seconds"] <= p["high"]
+        assert p["family"] == "matmul"
+        assert not p["extrapolated"]
+
+    def test_widens_outside_fitted_envelope(self, fitted, systems):
+        model, _ = fitted
+        a100, _ = systems
+        est = LearnedEstimator(a100, model)
+        inside = est.predict_with_uncertainty(_gemm_region(1024))
+        outside = est.predict_with_uncertainty(_gemm_region(8192))
+        assert outside["extrapolated"] and not inside["extrapolated"]
+        assert outside["rel_half_width"] > inside["rel_half_width"]
+
+    def test_widens_on_cross_system_transfer(self, fitted, systems):
+        model, _ = fitted
+        a100, h100 = systems
+        r = _gemm_region(1024)
+        same = LearnedEstimator(a100, model).predict_with_uncertainty(r)
+        moved = LearnedEstimator(h100, model).predict_with_uncertainty(r)
+        assert moved["extrapolated"] and not same["extrapolated"]
+        assert moved["rel_half_width"] > same["rel_half_width"]
+
+    def test_quality_row_fields(self, fitted, systems):
+        model, _ = fitted
+        _, h100 = systems
+        q = LearnedEstimator(h100, model).prediction_quality(
+            [_gemm_region(1024), _gemm_region(8192)])
+        assert q["extrapolated"] is True
+        assert q["extrapolated_regions"] == 2
+        assert q["uncertainty_s"] > 0
+        assert q["uncertainty_rel"] > 0
+
+
+class TestModelIO:
+    def test_roundtrip_preserves_predictions(self, fitted, systems,
+                                             tmp_path):
+        model, _ = fitted
+        a100, _ = systems
+        path = str(tmp_path / "m.json")
+        save_model(path, model)
+        reloaded = load_model(path)
+        r = _gemm_region(1024)
+        assert LearnedEstimator(a100, reloaded).get_run_time_estimate(r) \
+            == LearnedEstimator(a100, model).get_run_time_estimate(r)
+        assert reloaded.digest() == model.digest()
+
+    def test_version_gate(self, tmp_path):
+        path = tmp_path / "old.json"
+        path.write_text(json.dumps(
+            {"version": MODEL_VERSION + 1, "families": {}}))
+        with pytest.raises(ValueError, match="version"):
+            load_model(str(path))
+        bad = tmp_path / "bad.json"
+        bad.write_text("[]")
+        with pytest.raises(ValueError, match="families"):
+            load_model(str(bad))
+
+    def test_distinct_models_distinct_cache_keys(self, fitted, systems):
+        model, regions = fitted
+        a100, _ = systems
+        profile = {r.fingerprint: 2 * RooflineEstimator(
+            a100).get_run_time_estimate(r) for r in regions}
+        other = fit_model(regions, profile, a100)
+        k1 = LearnedEstimator(a100, model).cache_config_key
+        k2 = LearnedEstimator(a100, other).cache_config_key
+        assert k1.startswith("learned-") and k1 != k2
+        assert LearnedEstimator(a100, model).cache_config_key == k1
+
+
+class TestComposition:
+    def test_supports_false_for_unknown_family(self, fitted, systems):
+        model, _ = fitted
+        a100, _ = systems
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.ir import parse
+        from repro.core.slicing import linear_split
+        txt = jax.jit(lambda x: jnp.cumsum(jnp.sin(x))).lower(
+            jax.ShapeDtypeStruct((4096,), jnp.float32)).as_text()
+        region = linear_split(parse(txt))[0].region
+        assert region_family(region) != "matmul"
+        est = LearnedEstimator(a100, model)
+        assert not est.supports(region)
+        with pytest.raises(KeyError, match="op family"):
+            est.get_run_time_estimate(region)
+        mixed = MixedEstimator(est, RooflineEstimator(a100))
+        assert mixed.get_run_time_estimate(region) > 0
+
+    def test_portable_across_process_boundary(self):
+        from repro.core.registry import ESTIMATORS
+        assert isinstance(ESTIMATORS.get("learned"), type)
+        assert ESTIMATORS.portability_errors() == []
+
+
+class TestLearnedCampaign:
+    @pytest.mark.parametrize("executor", ["serial", "process"])
+    def test_checked_in_grid_matches_golden(self, executor):
+        """The shipped learned-fidelity grid runs clean on both the
+        in-process and the process-pool executor, reproduces its golden
+        snapshot, and every learned row carries uncertainty fields."""
+        from repro.campaign import CampaignSpec, run_campaign
+        from repro.campaign.report import (check_rows, golden_path,
+                                           load_json)
+        spec = CampaignSpec.from_json(SPEC)
+        res = run_campaign(spec, executor=executor)
+        assert res.summary["num_failed"] == 0
+        golden = load_json(golden_path(SPEC, "learned-fidelity"))
+        assert golden is not None
+        assert check_rows(golden, res.rows)["failures"] == []
+        learned_rows = [r for r in res.ok_rows
+                        if r["estimator"].startswith("learned-")]
+        assert learned_rows
+        for r in learned_rows:
+            assert r["uncertainty_s"] >= 0
+            assert 0 <= r["uncertainty_rel"]
+            assert isinstance(r["extrapolated"], bool)
+            # transferred and out-of-envelope points are flagged
+            expect = (r["system"] != "a100"
+                      or r["workload"] == "gemm-8192")
+            assert r["extrapolated"] is expect
+
+    def test_mape_report_row(self):
+        """`report` scores the learned tier's MAPE against the recorded
+        reference — the paper's cross-fidelity accuracy table."""
+        from repro.campaign import CampaignSpec, run_campaign
+        from repro.campaign.report import (build_report, load_json,
+                                           reference_path)
+        spec = CampaignSpec.from_json(SPEC)
+        res = run_campaign(spec)
+        ref = load_json(reference_path(SPEC, "learned-fidelity"))
+        report = build_report("learned-fidelity", res.rows, reference=ref)
+        mape = report["accuracy"]["mape_pct"]
+        learned_label = next(k for k in mape if k.startswith("learned-"))
+        assert mape["roofline"]["overall"] == pytest.approx(0.0)
+        assert 0 < mape[learned_label]["overall"] < 15.0
+        assert report["rank_preservation"]["all_trends_preserved"]
+
+    def test_serve_preload_and_campaign(self):
+        """The warm daemon preloads the learned grid's plans and serves
+        the campaign with uncertainty fields intact."""
+        from repro.serve.server import PredictionService
+        service = PredictionService()
+        info = service.preload(SPEC)
+        assert info["plans_built"] == 4
+        rows = []
+        result = service.campaign({"spec_path": SPEC,
+                                   "executor": "serial"},
+                                  on_row=rows.append)
+        assert result.summary["num_failed"] == 0
+        assert any("uncertainty_s" in r for r in rows)
+
+    def test_checked_in_model_regenerates_identically(self, systems):
+        """tools/fit_learned_model.py output is deterministic — the
+        checked-in model is exactly what a re-fit produces."""
+        a100, _ = systems
+        regions = [_gemm_region(m) for m in TRAIN_SIZES]
+        profile = record_profile(regions, RooflineEstimator(a100))
+        model = fit_model(regions, profile, a100, meta={
+            "source_system": "a100", "recorded_with": "roofline",
+            "workloads": [f"gemm-{m}" for m in TRAIN_SIZES]})
+        shipped = load_model(os.path.join(
+            REPO, "specs", "models", "learned-gemm-a100.json"))
+        assert model.digest() == shipped.digest()

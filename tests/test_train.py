@@ -181,3 +181,21 @@ class TestServe:
         assert res.tokens.shape == (2, 4)
         assert bool(jnp.all(res.tokens >= 0))
         assert bool(jnp.all(res.tokens < cfg.vocab_size))
+
+    def test_greedy_decode_rejects_overfull_cache(self):
+        """Regression: prompt + max_new_tokens must fit the KV cache —
+        one past the end raises up front instead of silently clamping
+        writes at max_len."""
+        from repro.models import model_specs
+        from repro.models.params import init_params
+        from repro.serve import greedy_decode
+        cfg = get_smoke_config("stablelm-12b")
+        params = init_params(model_specs(cfg), jax.random.PRNGKey(0))
+        prompt = jnp.array([[1, 2, 3]], jnp.int32)
+        # exactly full is fine: 3 + 5 == max_len
+        res = greedy_decode(cfg, params, prompt, max_new_tokens=5,
+                            max_len=8)
+        assert res.tokens.shape == (1, 5)
+        with pytest.raises(ValueError, match="max_len"):
+            greedy_decode(cfg, params, prompt, max_new_tokens=6,
+                          max_len=8)
