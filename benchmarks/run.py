@@ -26,6 +26,7 @@ FIGURES = {
     "micro": "micro_bench",
     "campaign": "bench_campaign",
     "serve": "bench_serve",
+    "search": "bench_search",
 }
 
 

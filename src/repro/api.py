@@ -253,12 +253,35 @@ class Session:
             plan_store=self.plan_store,
             schedule=schedule, progress=progress, session=self)
 
+    def search(self, spec, *, cache_path: str | None = None,
+               brute_force: bool = False, progress: bool = False):
+        """Run a multi-fidelity what-if search (see ``docs/search.md``).
+
+        ``spec`` is a SearchSpec, a spec dict, or a path to a spec JSON.
+        Like :meth:`campaign`, the session's live stores back the run —
+        a search after a campaign (or another search) over the same
+        workloads re-parses nothing and re-pays no cold miss."""
+        from .core.estimators.cache import PersistentCache
+        from .search.engine import run_search
+        from .search.spec import SearchSpec
+        if isinstance(spec, str):
+            spec = SearchSpec.from_json(spec, session=self)
+        elif isinstance(spec, dict):
+            spec = SearchSpec.from_dict(spec, session=self)
+        warm = cache_path is None or cache_path == self.cache_path
+        cache = self.cache_store if warm else PersistentCache(cache_path)
+        return run_search(spec, session=self, cache=cache,
+                          plan_store=self.plan_store,
+                          brute_force=brute_force, progress=progress)
+
     # ----------------------------- listing -----------------------------
 
     def describe(self) -> dict:
         """The live vocabularies, JSON-ready — what ``python -m
         repro.campaign list`` prints: estimator kinds, topology kinds,
-        and catalog systems with their source files."""
+        catalog systems with their source files, and what entry-point
+        plugin discovery found (``kinds()`` above triggers the scan)."""
+        from .core.registry import plugin_status
         return {
             "estimators": list(self.estimators.kinds()),
             "topologies": list(self.topologies.kinds()),
@@ -266,6 +289,7 @@ class Session:
                 {"id": sid, "name": self.systems.get(sid).name,
                  "source": _short_source(self.systems.source(sid))}
                 for sid in self.systems.names()],
+            "plugins": plugin_status(),
         }
 
 

@@ -418,6 +418,20 @@ def main(argv: list[str] | None = None) -> int:
         bad = 0
         for path in args.spec:
             try:
+                with open(path) as f:
+                    raw = json.load(f)
+                if "ladder" in raw or "objectives" in raw:
+                    # search specs live beside the campaign grids, so
+                    # `validate specs/*.json` must cover both kinds
+                    from ..search.spec import SearchSpec
+                    sspec = SearchSpec.from_file_dict(raw, path,
+                                                      session=session)
+                    n = len(sspec.campaign_for_rung(0).expand())
+                    print(f"search {sspec.name!r}: {n} candidates, "
+                          f"{len(sspec.ladder)}-rung ladder, objectives "
+                          f"{list(sspec.objectives)}")
+                    print(f"ok {path}")
+                    continue
                 specs = load_specs(path, session=session)
                 for name, spec in specs:
                     spec.validate(session=session)

@@ -67,6 +67,8 @@ def build_workload(spec: WorkloadSpec) -> Workload:
         return w
     if spec.gemm is not None:
         return _synthesize_gemm(spec)
+    if spec.mode in ("prefill", "decode"):
+        return _synthesize_serving(spec)
     return _export_from_arch(spec)
 
 
@@ -228,6 +230,85 @@ def synthesize_sharded_stack(shapes: list[tuple[int, int, int]],
             f"{{mhlo.num_partitions = {groups} : i32}} {{\n"
             f"  func.func public @main({', '.join(args)}) -> "
             f"{out} {{\n" + core + "  }\n}\n")
+
+
+def serving_step_shapes(cfg, mode: str, batch: int,
+                        seq: int) -> list[tuple[int, int, int]]:
+    """The (m, n, k) GEMM shapes of one serving step of ``cfg``.
+
+    First-order attention + MLP model of what ``serve/decode.py``
+    executes, flattened so every term is a plain 2-D GEMM with the right
+    total FLOPs and — critically for the decode regime — the right
+    dominant memory traffic:
+
+    * ``prefill``: the whole ``batch × seq`` prompt in one pass; the
+      score/context GEMMs carry the O(seq²) attention term.
+    * ``decode``: one new token per sequence against a ``seq``-deep KV
+      cache.  The projection GEMMs have m = batch (weight-bound) and the
+      attention GEMMs are flattened GEMVs whose operand footprint is the
+      *full KV cache read* (m = batch·heads·seq, k = head_dim, n = 1),
+      which is exactly what makes decode KV-cache-bound rather than
+      compute-bound.
+
+    Per layer: q/k/v projections, scores, context, output projection,
+    MLP up + down; one LM head GEMM closes the step.  All layers share
+    shapes, so the plan's regions collapse onto a handful of distinct
+    fingerprints — a serving sweep is cache-friendly by construction.
+    """
+    d, h, hk = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.head_dim or d // h
+    ff, vocab = cfg.d_ff, cfg.vocab_size
+    if mode == "prefill":
+        t = batch * seq                       # prompt tokens in flight
+        layer = [
+            (t, h * hd, d), (t, hk * hd, d), (t, hk * hd, d),  # q, k, v
+            (batch * h * seq, seq, hd),       # scores  QK^T (O(seq^2))
+            (batch * h * seq, hd, seq),       # context scores·V
+            (t, d, h * hd),                   # output projection
+            (t, ff, d), (t, d, ff),           # MLP up, down
+        ]
+    else:
+        layer = [
+            (batch, h * hd, d), (batch, hk * hd, d), (batch, hk * hd, d),
+            (batch * h * seq, 1, hd),         # scores: full K-cache read
+            (batch * h * hd, 1, seq),         # context: full V-cache read
+            (batch, d, h * hd),
+            (batch, ff, d), (batch, d, ff),
+        ]
+    shapes = [s for _ in range(cfg.num_layers) for s in layer]
+    shapes.append((batch, vocab, d))          # LM head (last position)
+    return shapes
+
+
+def _synthesize_serving(spec: WorkloadSpec) -> Workload:
+    """A jax-free serving-step workload (``mode="prefill"``/``"decode"``)
+    synthesized from the arch's registered :class:`ModelConfig` — the
+    campaign-grid promotion of ``serve/decode.py``'s execution shape.
+    Pure MLIR text via :func:`synthesize_gemm_stack`, so serving sweeps
+    (and the what-if search built on them) run without jax."""
+    import importlib
+
+    mod_name = spec.arch.replace("-", "_").replace(".", "_")
+    try:
+        cfg = importlib.import_module(f"repro.configs.{mod_name}").CONFIG
+    except ImportError:
+        from ..models import ARCH_IDS, EXTRA_IDS
+        raise ValueError(
+            f"workload {spec.name!r}: unknown arch {spec.arch!r} for "
+            f"mode {spec.mode!r}; have {sorted(ARCH_IDS + EXTRA_IDS)}"
+        ) from None
+    if cfg.num_heads <= 0 or cfg.family == "ssm":
+        raise ValueError(
+            f"workload {spec.name!r}: mode {spec.mode!r} models an "
+            f"attention KV cache; arch {spec.arch!r} ({cfg.family}) "
+            "has none")
+    shapes = serving_step_shapes(cfg, spec.mode, spec.batch, spec.seq)
+    return Workload(
+        name=spec.name,
+        stablehlo_text=synthesize_gemm_stack(shapes),
+        meta={"serving": {"arch": spec.arch, "mode": spec.mode,
+                          "batch": spec.batch, "seq": spec.seq,
+                          "num_layers": cfg.num_layers}})
 
 
 def _mesh_for(spec: WorkloadSpec):

@@ -276,6 +276,25 @@ def fidelity_table(rows: list[dict]) -> dict:
     return {"reference_estimator": ref, "rows": table}
 
 
+def cost_table(rows: list[dict]) -> dict:
+    """TCO view per (workload, system): mean ``$/step``, ``joules/step``
+    and ``perf/$`` over the remaining axes, from the cost columns the
+    runner derives off the catalog's per-device ratings.  Rows priced on
+    systems without cost/power fields simply don't appear."""
+    acc: dict = defaultdict(lambda: defaultdict(list))
+    for r in ok_rows(rows):
+        for f in ("usd_per_step", "joules_per_step", "perf_per_usd"):
+            if f in r:
+                acc[(r["workload"], r["system"])][f].append(r[f])
+    table = []
+    for (w, s), by_f in sorted(acc.items()):
+        entry = {"workload": w, "system": s}
+        for f, vals in by_f.items():
+            entry[f] = sum(vals) / len(vals)
+        table.append(entry)
+    return {"rows": table}
+
+
 # --------------------------------- report -----------------------------------
 
 
@@ -291,6 +310,7 @@ def build_report(name: str, rows: list[dict],
         "fidelity_comparison": fidelity_table(rows),
         "rank_preservation": rank_preservation(rows),
         "trend_orderings": trend_orderings(rows),
+        "cost": cost_table(rows),
     }
     if reference is not None:
         report["accuracy"] = mape_against_reference(rows, reference)
@@ -345,6 +365,19 @@ def render_markdown(report: dict) -> str:
                      for e in ests]
             rows.append([r["workload"], r["system"], *cells])
         lines += _md_table(["workload", "system", *ests], rows)
+    cost = report.get("cost", {}).get("rows") or []
+    if cost:
+        lines += ["", "## Cost model (mean per grid point)", ""]
+        body = []
+        for r in cost:
+            body.append([
+                r["workload"], r["system"],
+                f"{r['usd_per_step']:.3e}" if "usd_per_step" in r else "—",
+                (f"{r['joules_per_step']:.4g}"
+                 if "joules_per_step" in r else "—"),
+                f"{r['perf_per_usd']:.4g}" if "perf_per_usd" in r else "—"])
+        lines += _md_table(
+            ["workload", "system", "$/step", "joules/step", "perf/$"], body)
     check = report.get("golden_check")
     if check is not None:
         lines += ["", "## Golden-snapshot check", ""]

@@ -182,8 +182,28 @@ def _execute(job: JobSpec, plan: PredictionPlan, store,
     for k in ("workload", "system", "slicer"):
         pred.pop(k, None)
     row.update(pred)
+    row.update(cost_columns(p.step_time_s, system, topology.num_devices))
     row["job_wall_s"] = time.perf_counter() - t0
     return row, dict(pjob.cached.new_entries)
+
+
+def cost_columns(step_time_s: float, system, num_devices: int) -> dict:
+    """TCO columns for one grid point, from the catalog's per-device
+    cost/power ratings (absent fields -> absent columns, so unpriced
+    systems produce exactly the pre-cost-model row shape).
+
+    ``perf_per_usd`` is steps per dollar — the "how much work does a
+    dollar buy" axis of the TCO survey, higher is better."""
+    out: dict = {}
+    if step_time_s <= 0:
+        return out
+    if system.cost_per_hour is not None:
+        usd = step_time_s * num_devices * system.cost_per_hour / 3600.0
+        out["usd_per_step"] = usd
+        out["perf_per_usd"] = 1.0 / usd
+    if system.tdp_watts is not None:
+        out["joules_per_step"] = step_time_s * num_devices * system.tdp_watts
+    return out
 
 
 # process-pool worker state (plans + store, one set per worker process)

@@ -53,7 +53,12 @@ class WorkloadSpec:
       optimizer update, with abstract optimizer state and mesh shardings
       threaded through the lowering.  ``arch`` ids cover the LM registry
       ("llama3-1b", …) and the ResNet family ("resnet50", …; train-only,
-      ``img`` sets the image size);
+      ``img`` sets the image size).  ``mode="prefill"``/``"decode"`` are
+      the *serving* shapes: a jax-free synthesized step from the model
+      config's layer dims — prefill processes ``batch × seq`` prompt
+      tokens at once; decode emits one token per sequence against a
+      ``seq``-deep KV cache (the KV-cache-bound regime), so ``batch``
+      and ``seq`` are the serving sweep axes;
     * ``gemm`` — a synthesized single-``dot_general`` StableHLO workload
       (``{"m":.., "n":.., "k":.., "dtype":"bf16"}``) for operator-level
       sweeps like the paper's Fig 10 — no jax required.
@@ -75,7 +80,7 @@ class WorkloadSpec:
     seq: int = 512
     batch: int = 4
     img: int = 224                   # resnet archs: input image size
-    mode: str = "forward"            # "forward" | "train"
+    mode: str = "forward"            # "forward"|"train"|"prefill"|"decode"
     mesh: tuple | None = None        # device mesh shape for arch exports
     optimizer: str = "adamw"         # train-mode optimizer ("adamw"/"adafactor")
     fidelity: str | None = None      # default: optimized if available
@@ -102,10 +107,15 @@ class WorkloadSpec:
                 f"workload {self.name!r}: give exactly one source family "
                 "(stablehlo_path/hlo_path, arch, or gemm) — extra sources "
                 "would be silently ignored")
-        if self.mode not in ("forward", "train"):
+        if self.mode not in ("forward", "train", "prefill", "decode"):
             raise ValueError(
-                f"workload {self.name!r}: mode must be 'forward' or "
-                f"'train', got {self.mode!r}")
+                f"workload {self.name!r}: mode must be 'forward', "
+                f"'train', 'prefill', or 'decode', got {self.mode!r}")
+        if self.mode in ("prefill", "decode") and self.arch is None:
+            raise ValueError(
+                f"workload {self.name!r}: mode {self.mode!r} needs an "
+                "arch (the serving step is synthesized from the model "
+                "config's layer shapes)")
         if self.gemm is not None:
             missing = [k for k in ("m", "n", "k") if k not in self.gemm]
             if missing:

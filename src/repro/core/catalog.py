@@ -47,10 +47,14 @@ def validate_system_dict(d: dict, *, source: str = "<dict>") -> None:
         raise ValueError(f"{source}: system record missing {missing}")
     known = set(_REQUIRED_FIELDS) | {
         "mxu_rows", "mxu_cols", "n_mxu", "clock_hz", "vmem_bytes",
-        "kernel_overhead_s"}
+        "kernel_overhead_s", "cost_per_hour", "tdp_watts"}
     unknown = sorted(set(d) - known)
     if unknown:
         raise ValueError(f"{source}: unknown system fields {unknown}")
+    for k in ("cost_per_hour", "tdp_watts"):
+        if k in d and d[k] is not None and not (
+                isinstance(d[k], (int, float)) and d[k] > 0):
+            raise ValueError(f"{source}: {k} must be a positive number")
     pf = d["peak_flops"]
     if (not isinstance(pf, dict) or not pf
             or not all(isinstance(v, (int, float)) and v > 0

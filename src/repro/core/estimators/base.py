@@ -53,12 +53,18 @@ class ComputeEstimator(abc.ABC):
         in the same order.  Estimators that implement
         ``evaluate_batch(arrays)`` (a vectorized pass producing values
         bit-identical to the per-region method) are dispatched through
-        it; everything else ignores ``arrays`` and loops.
+        it; everything else ignores ``arrays`` and loops.  An
+        ``evaluate_batch`` may return None to decline a batch its
+        vector path cannot replay exactly (e.g. the systolic model on
+        plans with GEMMs inside nested control flow) — declined batches
+        fall back to the scalar loop.
         """
         if arrays is not None:
             batch = getattr(self, "evaluate_batch", None)
             if batch is not None:
-                return batch(arrays)
+                values = batch(arrays)
+                if values is not None:
+                    return values
         return [self.get_run_time_estimate(r) for r in regions]
 
     def get_compile_args(self) -> dict:

@@ -878,6 +878,10 @@ class CachedEstimator(ComputeEstimator):
             t0 = time.perf_counter()
             values = batch(arrays)
             dt = time.perf_counter() - t0
+            if values is None:
+                # inner estimator declined the batch (its vector path
+                # cannot replay these regions exactly): take the loop
+                return None
             each = dt / len(keys) if keys else 0.0
             records = {k: (v, each) for k, v in zip(keys, values)}
             with self._lock:

@@ -26,6 +26,9 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
+from ..ir.arrays import RegionArrays, gemm_dims as _gemm_dims
 from ..ir.graph import OpNode
 from ..ir.types import DTYPE_BYTES
 from ..registry import register_estimator
@@ -49,24 +52,6 @@ PRESETS = {
     "scalesim": SystolicPreset("scalesim", False, True, True, 0.85),
     "zigzag": SystolicPreset("zigzag", True, False, False, 1.0),
 }
-
-
-def _gemm_dims(op: OpNode) -> tuple[int, int, int, int] | None:
-    """(batch, M, N, K) of a dot_general, or None."""
-    if op.op != "dot_general" or len(op.operand_types) < 2:
-        return None
-    lhs, rhs = op.operand_types[0], op.operand_types[1]
-    lb = op.attrs.get("lhs_batch", ())
-    lc = op.attrs.get("lhs_contract", ())
-    rb = op.attrs.get("rhs_batch", ())
-    rc = op.attrs.get("rhs_contract", ())
-    batch = math.prod(lhs.shape[d] for d in lb) if lb else 1
-    k = math.prod(lhs.shape[d] for d in lc) if lc else 1
-    m = math.prod(d for i, d in enumerate(lhs.shape)
-                  if i not in lb and i not in lc)
-    n = math.prod(d for i, d in enumerate(rhs.shape)
-                  if i not in rb and i not in rc)
-    return batch, m, n, k
 
 
 @register_estimator("systolic")
@@ -147,3 +132,59 @@ class SystolicEstimator(ComputeEstimator):
             for sub in r:
                 total += self._op_latency(sub)
         return total * max(op.trip_count, 1)
+
+    def evaluate_batch(self, arrays: RegionArrays) -> list[float] | None:
+        """All regions of a plan as vectorized GEMM-dimension math.
+
+        Bit-identical to :meth:`get_run_time_estimate` per region: each
+        float64 expression mirrors :meth:`gemm_latency` operation for
+        operation and in the same order (Python's exact-int intermediate
+        products all stay below 2**53 for any realizable GEMM, where
+        float64 products are exact, so the numpy pipeline lands on the
+        same doubles), ``np.maximum`` is IEEE ``max``, and each region's
+        tile latencies are summed left-to-right in Python — non-GEMM ops
+        contribute an exact ``+0.0`` in the scalar walk, so skipping
+        them preserves the sum.  Returns None (declining the batch back
+        to the scalar loop) when the plan hides a ``dot_general`` inside
+        nested control flow, where the scalar path's sum-then-multiply
+        trip-count fold has no exact flat-array replay."""
+        if not arrays.gemm_exact:
+            return None
+        p = self.preset
+        s = self.system
+        rows, cols = s.mxu_rows, s.mxu_cols
+        b, m = arrays.gemm_batch, arrays.gemm_m
+        n, k = arrays.gemm_n, arrays.gemm_k
+        tiles_m = np.ceil(m / rows)
+        tiles_n = np.ceil(n / cols)
+        fill = rows + cols - 2
+        if p.charge_fill_per_tile:
+            cycles_per_tile = k + fill
+        else:
+            cycles_per_tile = k
+        tiles = tiles_m * tiles_n * b
+        compute_cycles = tiles * cycles_per_tile / s.n_mxu + fill
+        compute_t = compute_cycles / (s.clock_hz * p.utilization)
+
+        if not p.model_memory:
+            t = compute_t + s.kernel_overhead_s
+        else:
+            eb = np.array([float(DTYPE_BYTES.get(dt, 2))
+                           for dt in arrays.dtype_table], dtype=np.float64)
+            bytes_moved = b * (m * k + k * n + m * n) \
+                * eb[arrays.gemm_dtype_idx]
+            mem_t = bytes_moved / s.mem_bw
+            if p.double_buffer:
+                t = np.maximum(compute_t, mem_t)
+            else:
+                t = compute_t + mem_t
+            t = t + s.kernel_overhead_s
+        vals = t.tolist()
+        offs = arrays.gemm_offsets.tolist()
+        out = []
+        for r in range(arrays.num_regions):
+            total = 0.0
+            for v in vals[offs[r]:offs[r + 1]]:
+                total += v
+            out.append(total)
+        return out

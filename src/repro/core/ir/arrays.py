@@ -20,9 +20,21 @@ workers):
   to the scalar per-region path (same float64 operations in the same
   order — sums are performed left-to-right in Python over the numpy
   results precisely to preserve IEEE associativity with the legacy loop).
+
+:class:`RegionArrays` also carries a per-region CSR of GEMM dimensions
+(batch, M, N, K, operand dtype) for every ``dot_general`` directly in a
+region's op list — the substrate for
+:meth:`SystolicEstimator.evaluate_batch`.  The systolic scalar path
+recurses into nested control-flow regions and multiplies by trip count
+*after* summing each level, a fold that a flat weighted array cannot
+replay bit-identically when a loop body holds several GEMMs; regions
+hiding a ``dot_general`` below the top level therefore clear
+``gemm_exact`` and the estimator declines the whole batch back to the
+scalar loop rather than return approximately-right values.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -110,6 +122,38 @@ def build_program_arrays(program: Program) -> ProgramArrays:
     )
 
 
+def gemm_dims(op: OpNode) -> tuple[int, int, int, int] | None:
+    """(batch, M, N, K) of a ``dot_general``, or None.
+
+    Single source of the GEMM-shape parse shared by the systolic
+    estimator's scalar path and the vectorized arrays built here — the
+    two must agree op-for-op or the batch path stops being a replay of
+    the scalar one."""
+    if op.op != "dot_general" or len(op.operand_types) < 2:
+        return None
+    lhs, rhs = op.operand_types[0], op.operand_types[1]
+    lb = op.attrs.get("lhs_batch", ())
+    lc = op.attrs.get("lhs_contract", ())
+    rb = op.attrs.get("rhs_batch", ())
+    rc = op.attrs.get("rhs_contract", ())
+    batch = math.prod(lhs.shape[d] for d in lb) if lb else 1
+    k = math.prod(lhs.shape[d] for d in lc) if lc else 1
+    m = math.prod(d for i, d in enumerate(lhs.shape)
+                  if i not in lb and i not in lc)
+    n = math.prod(d for i, d in enumerate(rhs.shape)
+                  if i not in rb and i not in rc)
+    return batch, m, n, k
+
+
+def _hides_gemm(op: OpNode) -> bool:
+    """A ``dot_general`` somewhere below ``op``'s own regions."""
+    for region in op.regions:
+        for sub in region:
+            if gemm_dims(sub) is not None or _hides_gemm(sub):
+                return True
+    return False
+
+
 @dataclass
 class RegionArrays:
     """Per-compute-region evaluation arrays, in plan segment order."""
@@ -123,6 +167,13 @@ class RegionArrays:
     op_bytes: np.ndarray                # float64[nnz] op_cost(op).bytes
     op_dtype_idx: np.ndarray            # int32[nnz]
     op_active: np.ndarray               # float64[nnz] 1.0 iff flops or bytes
+    gemm_offsets: np.ndarray            # int64[R+1] CSR into gemm arrays
+    gemm_batch: np.ndarray              # float64[G] dot_general batch
+    gemm_m: np.ndarray                  # float64[G]
+    gemm_n: np.ndarray                  # float64[G]
+    gemm_k: np.ndarray                  # float64[G]
+    gemm_dtype_idx: np.ndarray          # int32[G] operand dtype
+    gemm_exact: bool = True             # no GEMMs hidden below top level
     _key_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
@@ -165,6 +216,13 @@ def build_region_arrays(regions: list) -> RegionArrays:
     op_dtype: list[int] = []
     op_active: list[float] = []
     fingerprints: list[str] = []
+    gemm_offsets = np.zeros(nr + 1, dtype=np.int64)
+    gemm_b: list[float] = []
+    gemm_m: list[float] = []
+    gemm_n: list[float] = []
+    gemm_k: list[float] = []
+    gemm_dtype: list[int] = []
+    gemm_exact = True
     for r, region in enumerate(regions):
         fingerprints.append(region.fingerprint)
         flops[r] = region.cost.flops
@@ -177,7 +235,18 @@ def build_region_arrays(regions: list) -> RegionArrays:
             op_dtype.append(dt_i(op.result_types[0].dtype if op.result_types
                                  else _DEFAULT_DTYPE))
             op_active.append(1.0 if (c.flops > 0 or c.bytes > 0) else 0.0)
+            dims = gemm_dims(op)
+            if dims is not None:
+                b, m, n, k = dims
+                gemm_b.append(float(b))
+                gemm_m.append(float(m))
+                gemm_n.append(float(n))
+                gemm_k.append(float(k))
+                gemm_dtype.append(dt_i(op.operand_types[0].dtype))
+            elif _hides_gemm(op):
+                gemm_exact = False
         op_offsets[r + 1] = len(op_flops)
+        gemm_offsets[r + 1] = len(gemm_b)
     return RegionArrays(
         fingerprints=fingerprints, dtype_table=dt_i.values,
         flops=flops, boundary_bytes=boundary, dtype_idx=dtype_idx,
@@ -186,4 +255,11 @@ def build_region_arrays(regions: list) -> RegionArrays:
         op_bytes=np.asarray(op_bytes, dtype=np.float64),
         op_dtype_idx=np.asarray(op_dtype, dtype=np.int32),
         op_active=np.asarray(op_active, dtype=np.float64),
+        gemm_offsets=gemm_offsets,
+        gemm_batch=np.asarray(gemm_b, dtype=np.float64),
+        gemm_m=np.asarray(gemm_m, dtype=np.float64),
+        gemm_n=np.asarray(gemm_n, dtype=np.float64),
+        gemm_k=np.asarray(gemm_k, dtype=np.float64),
+        gemm_dtype_idx=np.asarray(gemm_dtype, dtype=np.int32),
+        gemm_exact=gemm_exact,
     )

@@ -28,12 +28,27 @@ Third-party backends register through the same decorators::
 or, scoped to one :class:`repro.api.Session`, via
 ``session.register_estimator("my-sim")`` — session registries overlay
 the global ones without mutating them.
+
+A pip-installed package can skip the explicit import entirely by
+declaring an ``importlib.metadata`` entry point in the
+``repro.backends`` group::
+
+    [project.entry-points."repro.backends"]
+    my-sim = "mypkg.repro_backend"
+
+The named module is imported (its decorators then fire) the first time
+a kind lookup misses the known vocabulary or the vocabulary is listed —
+once per process, never at ``import repro`` time, so minimal
+environments stay import-light.  A plugin that fails to import (or
+collides with an existing kind) is reported as a warning and recorded
+in :func:`plugin_status`; it never takes down the host process.
 """
 from __future__ import annotations
 
 import difflib
 import importlib
 import sys
+import warnings
 from dataclasses import dataclass
 
 
@@ -62,6 +77,59 @@ class BuildContext:
         return path
 
 
+#: the importlib.metadata entry-point group third-party distributions
+#: use to expose backend modules for auto-discovery
+PLUGIN_GROUP = "repro.backends"
+
+_plugins_scanned = False
+_plugin_modules: dict[str, str] = {}    # entry-point name -> module loaded
+_plugin_errors: dict[str, str] = {}     # entry-point name -> why it failed
+
+
+def discover_plugins(*, force: bool = False) -> dict[str, str]:
+    """Import every ``repro.backends`` entry point, once per process.
+
+    Each entry point names a module whose import self-registers its
+    kinds through the usual decorators.  Returns the successfully loaded
+    ``{entry-point name: module}`` mapping.  A plugin that raises on
+    import — or whose registration collides with an existing kind — is
+    skipped with a :class:`RuntimeWarning` and recorded in
+    :func:`plugin_status`; one bad distribution must not break every
+    other backend on the machine.  ``force=True`` rescans (tests and
+    long-lived processes that just installed a package)."""
+    global _plugins_scanned
+    if _plugins_scanned and not force:
+        return dict(_plugin_modules)
+    _plugins_scanned = True
+    import importlib.metadata as _md
+    try:
+        eps = _md.entry_points(group=PLUGIN_GROUP)
+    except TypeError:       # pragma: no cover — legacy dict API (<3.10)
+        eps = _md.entry_points().get(PLUGIN_GROUP, [])
+    for ep in eps:
+        if ep.name in _plugin_modules:
+            continue
+        try:
+            ep.load()
+        except Exception as e:  # noqa: BLE001 — isolate broken plugins
+            _plugin_errors[ep.name] = f"{type(e).__name__}: {e}"
+            warnings.warn(
+                f"repro backend plugin {ep.name!r} ({ep.value}) failed "
+                f"to load and was skipped: {_plugin_errors[ep.name]}",
+                RuntimeWarning, stacklevel=2)
+        else:
+            _plugin_modules[ep.name] = ep.value
+            _plugin_errors.pop(ep.name, None)
+    return dict(_plugin_modules)
+
+
+def plugin_status() -> dict:
+    """What entry-point discovery has done so far in this process."""
+    return {"scanned": _plugins_scanned,
+            "loaded": dict(_plugin_modules),
+            "errors": dict(_plugin_errors)}
+
+
 class Registry:
     """Name -> backend-class registry with lazy builtins and scoping.
 
@@ -87,7 +155,10 @@ class Registry:
 
     def kinds(self) -> tuple[str, ...]:
         """Every known kind name (registered + lazy builtins + parents),
-        builtins first in declaration order, then extensions by name."""
+        builtins first in declaration order, then extensions by name.
+        Listing the vocabulary triggers entry-point discovery, so
+        pip-installed plugin kinds show up without an import."""
+        discover_plugins()
         seen: dict[str, None] = {}
         root: Registry | None = self
         chain = []
@@ -105,6 +176,11 @@ class Registry:
         return tuple(seen)
 
     def __contains__(self, kind: str) -> bool:
+        if (kind in self._entries or kind in self._builtins
+                or (self.parent is not None and kind in self.parent)):
+            return True
+        # unknown so far: maybe an installed-but-unimported plugin
+        discover_plugins()
         return (kind in self._entries or kind in self._builtins
                 or (self.parent is not None and kind in self.parent))
 
@@ -172,7 +248,18 @@ class Registry:
     # ------------------------------ lookups ------------------------------
 
     def get(self, kind: str) -> type:
-        """The backend class for ``kind`` (resolving lazy builtins)."""
+        """The backend class for ``kind`` (resolving lazy builtins and,
+        on a miss, rescanning installed entry-point plugins once)."""
+        cls = self._resolve(kind)
+        if cls is None:
+            discover_plugins()
+            cls = self._resolve(kind)
+        if cls is None:
+            raise ValueError(self.unknown_message(kind))
+        return cls
+
+    def _resolve(self, kind: str) -> type | None:
+        """One lookup pass: local entries, lazy builtins, then parents."""
         cls = self._entries.get(kind)
         if cls is not None:
             return cls
@@ -185,9 +272,9 @@ class Registry:
                     f"module {module!r} did not register {self.label} "
                     f"kind {kind!r} on import")
             return cls
-        if self.parent is not None and kind in self.parent:
-            return self.parent.get(kind)
-        raise ValueError(self.unknown_message(kind))
+        if self.parent is not None:
+            return self.parent._resolve(kind)
+        return None
 
     # ------------------------------ scoping ------------------------------
 

@@ -61,6 +61,10 @@ class System:
     vmem_bytes: float = 128 * 2**20
     # fixed per-kernel launch/dispatch overhead observed on the platform
     kernel_overhead_s: float = 2e-6
+    # TCO model (optional catalog fields, per device): None = unpriced —
+    # cost/power report columns are simply absent for such systems
+    cost_per_hour: float | None = None   # USD per device-hour (on-demand)
+    tdp_watts: float | None = None       # board TDP, watts per device
 
     def flops_for(self, dtype: str) -> float:
         if dtype in self.peak_flops:
@@ -75,6 +79,11 @@ class System:
         catalog ``id``, which is the file stem / registration key)."""
         d = asdict(self)
         d["interconnect"] = self.interconnect.to_dict()
+        # optional TCO fields stay absent (not null) when unpriced, so
+        # pre-cost-model catalog records round-trip byte-identically
+        for k in ("cost_per_hour", "tdp_watts"):
+            if d[k] is None:
+                del d[k]
         return d
 
     @classmethod

@@ -268,6 +268,25 @@ class ServeClient:
             body["rows"] = rows
         return self._request("POST", "/report", body, timeout_s=timeout_s)
 
+    def search(self, *, spec: dict | None = None,
+               spec_path: str | None = None, brute_force: bool = False,
+               timeout_s: float | None = None) -> dict:
+        """Multi-fidelity what-if search against the warm daemon;
+        returns the frontier report (see ``docs/search.md``)."""
+        body: dict = {}
+        if spec is not None:
+            body["spec"] = spec
+        if spec_path is not None:
+            body["spec_path"] = spec_path
+        if brute_force:
+            body["brute_force"] = True
+        return self._request("POST", "/search", body, timeout_s=timeout_s)
+
+    def reload(self, *, timeout_s: float | None = None) -> dict:
+        """Replay the daemon's boot-time preloads against the specs'
+        current on-disk contents (admin verb; fleets fan it out)."""
+        return self._request("POST", "/reload", {}, timeout_s=timeout_s)
+
     def shutdown(self) -> dict:
         """Ask the daemon to drain and stop (graceful, like SIGTERM)."""
         return self._request("POST", "/shutdown", {})

@@ -81,7 +81,7 @@ def request_class(path: str, body: dict) -> tuple:
         kind = e.get("kind") if isinstance(e, dict) else e
         return ("predict", str(name), str(body.get("system", "a100")),
                 str(kind))
-    if path in ("/campaign", "/report"):
+    if path in ("/campaign", "/report", "/search"):
         spec = body.get("spec")
         name = (spec.get("name") if isinstance(spec, dict)
                 else body.get("spec_path"))
@@ -197,7 +197,7 @@ class FleetSupervisor:
         self._lock = threading.Lock()
         self._counters = {"restarts": 0, "worker_deaths": 0,
                           "redispatches": 0, "degraded": 0,
-                          "hung_kills": 0}
+                          "hung_kills": 0, "reloads": 0}
         self._local_service = None    # lazy: only built when degrading
         self._monitor: threading.Thread | None = None
         self._thread: threading.Thread | None = None
@@ -424,6 +424,37 @@ class FleetSupervisor:
             self._counters["degraded"] += 1
         return row
 
+    # ------------------------------ admin ------------------------------
+
+    def reload_workers(self) -> dict:
+        """Fan ``POST /reload`` out to every live worker — each replays
+        its boot-time preloads against the specs' current on-disk
+        contents.  In-flight requests are untouched (reload is just one
+        more concurrent request per worker; the per-worker plan store
+        only grows or swaps whole entries)."""
+        reports = []
+        for idx in range(self.n):
+            w = self._workers[idx]
+            if w is None or not w.alive():
+                reports.append({"worker": idx, "alive": False})
+                continue
+            try:
+                req = urllib.request.Request(
+                    w.url + "/reload", data=b"{}", method="POST",
+                    headers={"Content-Type": "application/json"})
+                rep = json.loads(
+                    urllib.request.urlopen(req, timeout=30.0).read())
+            except (OSError, ValueError) as e:
+                reports.append({"worker": idx, "alive": w.alive(),
+                                "error": f"{type(e).__name__}: {e}"})
+                continue
+            rep["worker"] = idx
+            reports.append(rep)
+        with self._lock:
+            self._counters["reloads"] += 1
+        return {"reloaded": sum(1 for r in reports if "plans_built" in r),
+                "workers": reports}
+
     # ------------------------------ stats ------------------------------
 
     def stats(self) -> dict:
@@ -431,7 +462,8 @@ class FleetSupervisor:
             counters = dict(self._counters)
         workers = []
         totals = {"predict_served": 0, "campaign_served": 0,
-                  "campaign_rows": 0, "duplicate_cold_misses": 0,
+                  "campaign_rows": 0, "search_served": 0,
+                  "duplicate_cold_misses": 0,
                   "resumed_rows": 0, "retried_rows": 0}
         for idx in range(self.n):
             w = self._workers[idx]
@@ -452,6 +484,7 @@ class FleetSupervisor:
             totals["predict_served"] += st["predict"]["served"]
             totals["campaign_served"] += st["campaign"]["served"]
             totals["campaign_rows"] += st["campaign"]["rows"]
+            totals["search_served"] += st.get("search", {}).get("served", 0)
             totals["duplicate_cold_misses"] += (
                 st["predict"]["duplicate_cold_misses"]
                 + st["campaign"]["duplicate_cold_misses"])
@@ -566,6 +599,10 @@ def _make_handler(fleet: FleetSupervisor):
                     self._proxy_unary(path, body, degrade=True)
                 elif path == "/report":
                     self._proxy_unary(path, body, degrade=False)
+                elif path == "/search":
+                    self._proxy_unary(path, body, degrade=False)
+                elif path == "/reload":
+                    self._json(200, fleet.reload_workers())
                 elif path == "/campaign":
                     self._proxy_campaign(body)
                 else:

@@ -97,6 +97,10 @@ class PredictionService:
         self._campaign = {"served": 0, "rows": 0, "cache_hits": 0,
                           "cache_misses": 0, "duplicate_cold_misses": 0,
                           "resumed_rows": 0, "retried_rows": 0}
+        self._search = {"served": 0, "evaluations": 0,
+                        "frontier_points": 0}
+        #: spec paths preloaded at boot, replayed by :meth:`reload`
+        self._preload_paths: list[str] = []
         self._evaluated_keys: set[str] = set()
         #: name -> WorkloadSpec it was materialized from (identity memo:
         #: an unchanged re-registration skips the rebuild entirely)
@@ -126,8 +130,26 @@ class PredictionService:
                 if key not in self.plans.plans:
                     self.plans.get(*key)
                     planned += 1
+        with self._lock:
+            if spec_path not in self._preload_paths:
+                self._preload_paths.append(spec_path)
         return {"spec": spec_path, "workloads": added,
                 "plans_built": planned}
+
+    def reload(self) -> dict:
+        """Replay every boot-time :meth:`preload` against the specs'
+        *current* on-disk contents — an edited spec re-materializes its
+        changed workloads and plans, unchanged ones are identity-memo
+        no-ops, and in-flight requests keep the plans they already hold
+        (the plan store only ever grows or replaces whole entries)."""
+        self._count("reload")
+        with self._lock:
+            paths = list(self._preload_paths)
+        reports = [self.preload(p) for p in paths]
+        return {"specs": len(reports),
+                "workloads": sorted({w for r in reports
+                                     for w in r["workloads"]}),
+                "plans_built": sum(r["plans_built"] for r in reports)}
 
     # ---------------------------- request body ----------------------------
 
@@ -233,6 +255,7 @@ class PredictionService:
             predict["duplicate_cold_misses"] = (
                 predict["cache_misses"] - len(self._evaluated_keys))
             campaign = dict(self._campaign)
+            search = dict(self._search)
             requests = dict(self._requests)
         out = {
             "uptime_s": round(time.monotonic() - self._mono0, 3),
@@ -240,6 +263,7 @@ class PredictionService:
             "requests": requests,
             "predict": predict,
             "campaign": campaign,
+            "search": search,
             "plans": {
                 "resident": len(self.plans.plans),
                 "workloads": len(self.plans.texts),
@@ -375,6 +399,43 @@ class PredictionService:
         self._count("campaign")
         spec, opts = self.campaign_spec(body)
         return self.run_campaign(spec, opts, on_row=on_row)
+
+    def search(self, body: dict) -> dict:
+        """Multi-fidelity what-if search against the warm session state;
+        returns the frontier report (see ``docs/search.md``).  The body
+        carries exactly one of ``spec`` (inline search dict) or
+        ``spec_path`` (server-side spec file), plus an optional
+        ``brute_force`` flag."""
+        from ..search.engine import run_search
+        from ..search.report import build_search_report
+        from ..search.spec import SearchSpec
+        self._count("search")
+        if ("spec" in body) == ("spec_path" in body):
+            raise BadRequest(
+                "search request needs exactly one of 'spec' (inline "
+                "search dict) or 'spec_path' (server-side spec file)")
+        try:
+            if "spec_path" in body:
+                spec = SearchSpec.from_json(str(body["spec_path"]),
+                                            session=self.session)
+            else:
+                spec = SearchSpec.from_dict(dict(body["spec"]),
+                                            session=self.session)
+        except OSError as e:
+            raise BadRequest(f"cannot read spec: {e}") from e
+        except (TypeError, ValueError, KeyError) as e:
+            raise BadRequest(f"bad search spec: {e}") from e
+        for w in spec.workloads:
+            self._sources.setdefault(w.name, w)
+        result = run_search(
+            spec, session=self.session, cache=self.session.cache_store,
+            plan_store=self.plans,
+            brute_force=bool(body.get("brute_force", False)))
+        with self._lock:
+            self._search["served"] += 1
+            self._search["evaluations"] += len(result.rows)
+            self._search["frontier_points"] += len(result.frontier)
+        return build_search_report(result)
 
     def report(self, body: dict) -> dict:
         """Campaign + evaluation report in one request: run the spec (or
@@ -537,7 +598,8 @@ def _make_handler(server: PredictionServer):
                 self._json(200, service.healthz())
             elif path == "/stats":
                 self._json(200, service.stats())
-            elif path in ("/predict", "/campaign", "/report", "/shutdown"):
+            elif path in ("/predict", "/campaign", "/report", "/search",
+                          "/reload", "/shutdown"):
                 self._json(405, {"error": f"{path} takes POST, not GET"})
             else:
                 self._json(404, {"error": f"no such endpoint {path!r}"})
@@ -569,6 +631,11 @@ def _make_handler(server: PredictionServer):
                     self._campaign_stream(self._body())
                 elif path == "/report":
                     self._json(200, service.report(self._body()))
+                elif path == "/search":
+                    self._json(200, service.search(self._body()))
+                elif path == "/reload":
+                    self._body()   # admin verb takes no arguments
+                    self._json(200, service.reload())
                 else:
                     self._json(404, {"error": f"no such endpoint {path!r}"})
             except ServiceError as e:

@@ -1,6 +1,7 @@
 """Docs and spec hygiene: intra-repo links resolve, the docs tree
 exists, and every checked-in campaign spec validates and expands."""
 import glob
+import json
 import os
 import subprocess
 import sys
@@ -39,15 +40,27 @@ def test_checked_in_specs_validate_and_expand():
         s for s in glob.glob(os.path.join(REPO, "specs", "*.json"))
         # bench_baselines.json is tools/bench_check.py data, not a grid
         if not s.endswith("bench_baselines.json"))
+    from repro.search.spec import SearchSpec
+
     assert any(s.endswith("paper_full.json") for s in spec_files)
     names = set()
     for path in spec_files:
+        with open(path) as f:
+            raw = json.load(f)
+        if "ladder" in raw or "objectives" in raw:
+            # search specs live beside the campaign grids and validate
+            # through their own schema (each ladder rung is a grid)
+            sspec = SearchSpec.from_file_dict(raw, path)
+            assert len(sspec.campaign_for_rung(0).expand()) > 0
+            names.add(sspec.name)
+            continue
         for name, spec in load_specs(path):
             spec.validate()
             jobs = spec.expand()
             assert len(jobs) == spec.num_points > 0
             names.add(name)
-    assert {"fig6-gpu", "fig7-resnet", "fig10-gemm", "fig11-tpu"} <= names
+    assert {"fig6-gpu", "fig7-resnet", "fig10-gemm", "fig11-tpu",
+            "search-gemm", "search-serving"} <= names
 
 
 def test_paper_full_suite_covers_figure_specs():

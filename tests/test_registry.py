@@ -1,15 +1,18 @@
 """Registry + system-catalog contract: open vocabularies, error paths,
-catalog round-trips, and the back-compat shims over both."""
+catalog round-trips, entry-point plugin discovery, and the back-compat
+shims over both."""
 import json
 import os
+import sys
 
 import pytest
 
+import repro.core.registry as registry_mod
 from repro.core.catalog import (SystemRegistry, default_registry,
                                 validate_system_dict)
 from repro.core.registry import (ESTIMATORS, TOPOLOGIES, BuildContext,
-                                 Registry, register_estimator,
-                                 register_topology)
+                                 Registry, discover_plugins, plugin_status,
+                                 register_estimator, register_topology)
 from repro.core.systems import Interconnect, System
 
 
@@ -106,6 +109,112 @@ class TestRegistry:
             assert TOPOLOGIES.get("tmp-global-topo") is cls2
         finally:
             TOPOLOGIES._entries.pop("tmp-global-topo", None)
+
+
+_PLUGIN_SRC = '''\
+"""Synthetic repro backend distribution (test fixture)."""
+from repro.core.registry import register_estimator, register_topology
+
+
+@register_estimator("ep-sim")
+class EpSimEstimator:
+    @classmethod
+    def from_spec(cls, options, system, context):
+        return cls()
+
+
+@register_topology("ep-topo")
+class EpTopology:
+    @classmethod
+    def from_spec(cls, params, system, context):
+        return cls()
+'''
+
+_BROKEN_SRC = 'raise ImportError("synthetic broken plugin")\n'
+
+
+def _make_dist(root, dist: str, module: str, ep_name: str, source: str):
+    """A minimal installed distribution: module + .dist-info with an
+    ``entry_points.txt`` in the ``repro.backends`` group — everything
+    ``importlib.metadata`` needs to surface the entry point."""
+    (root / f"{module}.py").write_text(source)
+    info = root / f"{dist}-0.1.dist-info"
+    info.mkdir()
+    (info / "METADATA").write_text(
+        f"Metadata-Version: 2.1\nName: {dist}\nVersion: 0.1\n")
+    (info / "entry_points.txt").write_text(
+        f"[repro.backends]\n{ep_name} = {module}\n")
+    (info / "RECORD").write_text("")
+
+
+@pytest.fixture
+def plugin_state(monkeypatch):
+    """Fresh discovery state; global registries restored afterwards."""
+    monkeypatch.setattr(registry_mod, "_plugins_scanned", False)
+    monkeypatch.setattr(registry_mod, "_plugin_modules", {})
+    monkeypatch.setattr(registry_mod, "_plugin_errors", {})
+    yield
+    ESTIMATORS._entries.pop("ep-sim", None)
+    TOPOLOGIES._entries.pop("ep-topo", None)
+    for mod in ("repro_ep_plug", "repro_ep_broken"):
+        sys.modules.pop(mod, None)
+
+
+class TestPluginDiscovery:
+    def test_installed_plugin_autoregisters(self, tmp_path, monkeypatch,
+                                            plugin_state):
+        _make_dist(tmp_path, "repro_ep_plug", "repro_ep_plug",
+                   "ep-plug", _PLUGIN_SRC)
+        monkeypatch.syspath_prepend(str(tmp_path))
+        # no explicit import anywhere: the kind lookup alone finds it
+        assert hasattr(ESTIMATORS.get("ep-sim"), "from_spec")
+        assert "ep-topo" in TOPOLOGIES
+        assert "ep-sim" in ESTIMATORS.kinds()
+        status = plugin_status()
+        assert status["loaded"] == {"ep-plug": "repro_ep_plug"}
+        assert status["errors"] == {}
+
+    def test_discovery_runs_once_per_process(self, tmp_path, monkeypatch,
+                                             plugin_state):
+        _make_dist(tmp_path, "repro_ep_plug", "repro_ep_plug",
+                   "ep-plug", _PLUGIN_SRC)
+        monkeypatch.syspath_prepend(str(tmp_path))
+        assert discover_plugins() == {"ep-plug": "repro_ep_plug"}
+        import importlib.metadata as md
+
+        def bomb(*a, **k):
+            raise AssertionError("entry points rescanned")
+        monkeypatch.setattr(md, "entry_points", bomb)
+        assert discover_plugins() == {"ep-plug": "repro_ep_plug"}
+        assert "ep-sim" in ESTIMATORS          # cached, no rescan
+
+    def test_broken_plugin_warns_but_others_load(self, tmp_path,
+                                                 monkeypatch, plugin_state):
+        _make_dist(tmp_path, "repro_ep_plug", "repro_ep_plug",
+                   "ep-plug", _PLUGIN_SRC)
+        _make_dist(tmp_path, "repro_ep_broken", "repro_ep_broken",
+                   "ep-broken", _BROKEN_SRC)
+        monkeypatch.syspath_prepend(str(tmp_path))
+        with pytest.warns(RuntimeWarning, match="failed to load"):
+            loaded = discover_plugins()
+        assert loaded == {"ep-plug": "repro_ep_plug"}
+        assert "ImportError" in plugin_status()["errors"]["ep-broken"]
+        assert ESTIMATORS.get("ep-sim")        # good plugin unaffected
+
+    def test_unknown_kind_message_includes_plugin_kinds(self, tmp_path,
+                                                        monkeypatch,
+                                                        plugin_state):
+        _make_dist(tmp_path, "repro_ep_plug", "repro_ep_plug",
+                   "ep-plug", _PLUGIN_SRC)
+        monkeypatch.syspath_prepend(str(tmp_path))
+        with pytest.raises(ValueError, match="did you mean 'ep-sim'"):
+            ESTIMATORS.get("ep-simm")
+
+    def test_no_plugins_installed_is_quiet(self, plugin_state):
+        assert discover_plugins() == {}
+        assert plugin_status()["scanned"] is True
+        with pytest.raises(ValueError, match="unknown estimator"):
+            ESTIMATORS.get("nope-kind")
 
 
 class TestSpecKindsShim:

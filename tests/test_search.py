@@ -1,0 +1,246 @@
+"""The `repro.search` subsystem: Pareto filter units, spec validation,
+engine behavior on a tiny inline grid, and the checked-in search specs —
+golden frontier snapshots plus the prune-soundness guarantee (the
+fidelity ladder must land on exactly the frontier a top-rung brute
+force finds, while scoring well under half the grid there)."""
+import os
+import random
+
+import pytest
+
+from repro import api
+from repro.search.pareto import dominates, pareto_filter
+from repro.search.report import (build_search_report, check_frontier,
+                                 golden_path, load_json,
+                                 make_frontier_golden)
+from repro.search.spec import SearchSpec
+
+REPO = os.path.join(os.path.dirname(__file__), os.pardir)
+SPECS = {
+    "gemm": os.path.join(REPO, "specs", "search_gemm.json"),
+    "serving": os.path.join(REPO, "specs", "search_serving.json"),
+}
+
+
+class TestDominates:
+    def test_strict_domination(self):
+        assert dominates((1.0, 1.0), (2.0, 2.0))
+        assert not dominates((2.0, 2.0), (1.0, 1.0))
+
+    def test_equal_vectors_never_dominate(self):
+        assert not dominates((1.0, 2.0), (1.0, 2.0))
+        assert not dominates((1.0, 2.0), (1.0, 2.0), eps=0.5)
+
+    def test_partial_improvement_is_not_domination(self):
+        assert not dominates((1.0, 3.0), (2.0, 2.0))
+
+    def test_epsilon_blocks_near_ties(self):
+        # b is only 20% worse on both axes: inside eps=0.25 slack
+        assert dominates((1.0, 1.0), (1.2, 1.2), eps=0.0)
+        assert not dominates((1.0, 1.0), (1.2, 1.2), eps=0.25)
+        assert dominates((1.0, 1.0), (1.2, 1.2), eps=0.1)
+
+    def test_arity_mismatch_raises(self):
+        with pytest.raises(ValueError, match="arity"):
+            dominates((1.0,), (1.0, 2.0))
+
+
+class TestParetoFilter:
+    POINTS = {
+        "a": (1.0, 4.0),
+        "b": (2.0, 2.0),
+        "c": (4.0, 1.0),
+        "d": (3.0, 3.0),     # dominated by b
+        "e": (2.0, 2.0),     # exact tie with b: both survive at eps=0
+    }
+
+    def test_domination_and_ties(self):
+        assert pareto_filter(self.POINTS) == ["a", "b", "c", "e"]
+
+    def test_epsilon_widens_the_prune(self):
+        pts = {"x": (1.0, 1.0), "y": (1.1, 1.1), "z": (5.0, 5.0)}
+        assert pareto_filter(pts, eps=0.0) == ["x"]
+        # y is within 25% of x on every axis: ε keeps it alive
+        assert pareto_filter(pts, eps=0.25) == ["x", "y"]
+
+    def test_shuffled_input_order_is_irrelevant(self):
+        ids = list(self.POINTS)
+        want = pareto_filter(self.POINTS)
+        rng = random.Random(7)
+        for _ in range(10):
+            rng.shuffle(ids)
+            shuffled = {k: self.POINTS[k] for k in ids}
+            assert pareto_filter(shuffled) == want
+
+    def test_single_point_survives(self):
+        assert pareto_filter({"only": (3.0, 3.0)}) == ["only"]
+
+
+class TestSpecValidation:
+    BASE = {
+        "name": "t",
+        "workloads": [{"name": "g", "fidelity": "raw",
+                       "gemm": {"m": 256, "n": 256, "k": 256,
+                                "dtype": "bf16"}}],
+        "systems": ["a100"],
+        "objectives": ["step_time_s", "usd_per_step"],
+        "ladder": [{"kind": "roofline"}],
+    }
+
+    def _spec(self, **over):
+        return SearchSpec.from_dict({**self.BASE, **over})
+
+    def test_valid_spec_round_trips(self):
+        spec = self._spec()
+        again = SearchSpec.from_dict(spec.to_dict())
+        assert again.objectives == spec.objectives
+        assert again.epsilon == spec.epsilon
+
+    def test_unknown_objective_rejected(self):
+        with pytest.raises(ValueError, match="unknown objectives"):
+            self._spec(objectives=["step_time_s", "happiness"])
+
+    def test_single_objective_rejected(self):
+        with pytest.raises(ValueError, match="two distinct objectives"):
+            self._spec(objectives=["step_time_s"])
+
+    def test_negative_epsilon_rejected(self):
+        with pytest.raises(ValueError, match="epsilon"):
+            self._spec(epsilon=-0.1)
+
+    def test_unknown_constraint_rejected(self):
+        with pytest.raises(ValueError, match="unknown constraints"):
+            self._spec(constraints={"max_vibes": 1.0})
+
+    def test_non_positive_ceiling_rejected(self):
+        with pytest.raises(ValueError, match="positive"):
+            self._spec(constraints={"max_step_time_s": 0})
+
+    def test_empty_ladder_rejected(self):
+        with pytest.raises(ValueError, match="ladder"):
+            self._spec(ladder=[])
+
+    def test_unknown_spec_key_rejected(self):
+        with pytest.raises(ValueError, match="unknown search spec keys"):
+            self._spec(objective=["step_time_s"])
+
+
+TINY = {
+    "name": "tiny",
+    "workloads": [
+        {"name": "gemm-512", "fidelity": "raw",
+         "gemm": {"m": 512, "n": 512, "k": 512, "dtype": "bf16"}},
+        {"name": "gemm-2048", "fidelity": "raw",
+         "gemm": {"m": 2048, "n": 2048, "k": 2048, "dtype": "bf16"}},
+    ],
+    "systems": ["a100", "h100"],
+    "objectives": ["step_time_s", "usd_per_step"],
+    "ladder": [{"kind": "roofline"},
+               {"kind": "systolic", "options": {"preset": "scalesim"}}],
+    "constraints": {"mem_capacity_fit": True},
+    "topologies": [{"kind": "a2a", "params": {"num_devices": 1}},
+                   {"kind": "a2a", "params": {"num_devices": 4}}],
+}
+
+
+class TestEngineTinyGrid:
+    @pytest.fixture(scope="class")
+    def run(self):
+        return api.Session().search(TINY)
+
+    def test_counters_account_for_every_candidate(self, run):
+        c = run.counters
+        assert c["candidates"] == 8          # 2 workloads × 2 systems × 2 topo
+        assert c["infeasible"] == 0
+        live = c["candidates"] - c["infeasible"]
+        pruned = (c["pruned_ceiling"] + c["pruned_intra"]
+                  + c["pruned_dominated"] + c["final_infeasible"])
+        assert c["frontier_size"] <= live - pruned
+        assert c["top_rung_evaluations"] < c["candidates"]
+
+    def test_frontier_matches_brute_force(self, run):
+        brute = api.Session().search(TINY, brute_force=True)
+        assert run.frontier == brute.frontier
+        for k in run.frontier:
+            assert run.candidates[k]["values"] == \
+                brute.candidates[k]["values"]
+
+    def test_provenance_rungs_sorted_and_top_is_final(self, run):
+        for k in run.frontier:
+            rungs = [e["rung"] for e in run.candidates[k]["rungs"]]
+            assert rungs == sorted(rungs)
+            assert rungs[-1] == 1            # values come from the top rung
+            assert run.candidates[k]["rungs"][-1]["values"] == \
+                run.candidates[k]["values"]
+
+    def test_determinism(self, run):
+        again = api.Session().search(TINY)
+        assert make_frontier_golden(build_search_report(again)) == \
+            make_frontier_golden(build_search_report(run))
+
+    def test_impossible_ceiling_empties_the_frontier(self):
+        spec = dict(TINY, constraints={"max_step_time_s": 1e-12})
+        res = api.Session().search(spec)
+        assert res.frontier == []
+        c = res.counters
+        assert c["pruned_ceiling"] + c["final_infeasible"] > 0
+
+    def test_mem_capacity_infeasibility(self):
+        spec = dict(TINY)
+        spec["workloads"] = [
+            {"name": "gemm-huge", "fidelity": "raw",
+             "gemm": {"m": 131072, "n": 131072, "k": 131072,
+                      "dtype": "f32"}}]
+        res = api.Session().search(spec)
+        assert all(not r["feasible"] for r in res.candidates.values())
+        assert all("mem_capacity_fit" in r["reason"]
+                   for r in res.candidates.values())
+        assert res.frontier == []
+
+    def test_warm_session_reuses_everything(self):
+        session = api.Session()
+        session.search(TINY)
+        res = session.search(TINY)
+        assert res.counters["cache_misses"] == 0
+        assert res.counters["cache_hits"] > 0
+
+
+class TestCheckedInSpecs:
+    @pytest.fixture(scope="class", params=sorted(SPECS))
+    def runs(self, request):
+        path = SPECS[request.param]
+        session = api.Session()
+        ladder = session.search(path)
+        brute = session.search(path, brute_force=True)
+        return path, ladder, brute
+
+    def test_golden_frontier_snapshot(self, runs):
+        path, ladder, _ = runs
+        report = build_search_report(ladder)
+        golden = load_json(golden_path(path, report["search"]))
+        assert golden is not None, \
+            f"golden missing — run `python -m repro.search run {path} " \
+            f"--update-golden`"
+        assert check_frontier(golden, report) == []
+
+    def test_prune_soundness_vs_brute_force(self, runs):
+        """No analytically-pruned candidate may be Pareto-optimal at the
+        top fidelity: ladder and brute-force frontiers must agree."""
+        _, ladder, brute = runs
+        assert ladder.frontier == brute.frontier
+        pruned = {k for k, r in ladder.candidates.items()
+                  if r.get("pruned")}
+        assert pruned.isdisjoint(brute.frontier)
+
+    def test_top_rung_economy(self, runs):
+        _, ladder, _ = runs
+        c = ladder.counters
+        assert 0 < c["top_rung_fraction"] < 0.5
+        assert c["top_rung_evaluations"] < c["candidates"]
+
+    def test_cost_columns_present(self, runs):
+        _, ladder, _ = runs
+        report = build_search_report(ladder)
+        for p in report["frontier"]:
+            assert "usd_per_step" in p["values"]
+            assert "perf_per_usd" in p["extras"]

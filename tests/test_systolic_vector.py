@@ -1,0 +1,169 @@
+"""Differential test: systolic ``evaluate_batch`` vs the scalar walk.
+
+The vectorized path must be a bit-for-bit replay of
+``get_run_time_estimate`` region by region (``==`` on floats, never
+approx) across every preset — same float64 operations in the same
+order — and must *decline* (return None) any batch it cannot replay
+exactly, i.e. plans hiding a ``dot_general`` inside nested control
+flow, where the scalar sum-then-multiply trip-count fold has no flat
+vectorized equivalent.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.catalog import default_registry
+from repro.core.estimators import (CachedEstimator, PRESETS,
+                                   SystolicEstimator)
+from repro.core.ir import parse
+from repro.core.ir.arrays import build_region_arrays
+from repro.core.pipeline import build_plan
+from repro.core.slicing import linear_split
+from repro.core.systems import TPU_V3_CORE, TPU_V5E
+
+
+def _region(f, *specs):
+    txt = jax.jit(f).lower(*specs).as_text()
+    segs = linear_split(parse(txt))
+    assert len(segs) == 1
+    return segs[0].region
+
+
+@pytest.fixture(scope="module")
+def mixed_regions():
+    """A batch spanning the shapes the vector path must reproduce:
+    square bf16, ragged f32 (non-divisible tiles), batched, chained
+    dots in one region, and a GEMM-free region (exact zero)."""
+    S = jax.ShapeDtypeStruct
+    regions = [
+        _region(lambda a, b: jnp.tanh(a @ b),
+                S((512, 512), jnp.bfloat16), S((512, 512), jnp.bfloat16)),
+        _region(lambda a, b: a @ b,
+                S((300, 700), jnp.float32), S((700, 130), jnp.float32)),
+        _region(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                S((4, 96, 160), jnp.bfloat16), S((4, 160, 320), jnp.bfloat16)),
+        _region(lambda a, b, c: (a @ b) @ c,
+                S((256, 128), jnp.bfloat16), S((128, 512), jnp.bfloat16),
+                S((512, 64), jnp.bfloat16)),
+        _region(lambda x: jnp.cumsum(jnp.sin(x)),
+                S((4096,), jnp.float32)),
+    ]
+    return regions, build_region_arrays(regions)
+
+
+#: a while loop whose inlined body holds the ``dot_general`` — below
+#: the top level of the compute region, so the scalar walk's
+#: sum-then-multiply trip-count fold applies (HLO text because jax
+#: outlines scan bodies into calls; the HLO front end inlines them)
+NESTED_DOT_HLO = """\
+HloModule nested_dot
+
+%cond.10 (p.11: (s32[], f32[64,64])) -> pred[] {
+  %p.11 = (s32[], f32[64,64]{1,0}) parameter(0)
+  %gte.12 = s32[] get-tuple-element(%p.11), index=0
+  %c.13 = s32[] constant(3)
+  ROOT %cmp.14 = pred[] compare(%gte.12, %c.13), direction=LT
+}
+
+%body.20 (p.21: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p.21 = (s32[], f32[64,64]{1,0}) parameter(0)
+  %gte.22 = f32[64,64]{1,0} get-tuple-element(%p.21), index=1
+  %dot.23 = f32[64,64]{1,0} dot(%gte.22, %gte.22), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %gte.25 = s32[] get-tuple-element(%p.21), index=0
+  %c.26 = s32[] constant(1)
+  %add.27 = s32[] add(%gte.25, %c.26)
+  ROOT %tuple.28 = (s32[], f32[64,64]{1,0}) tuple(%add.27, %dot.23)
+}
+
+ENTRY %main.40 (arg.41: f32[64,64]) -> f32[64,64] {
+  %arg.41 = f32[64,64]{1,0} parameter(0)
+  %c.42 = s32[] constant(0)
+  %tuple.43 = (s32[], f32[64,64]{1,0}) tuple(%c.42, %arg.41)
+  %while.44 = (s32[], f32[64,64]{1,0}) while(%tuple.43), condition=%cond.10, body=%body.20
+  ROOT %gte.45 = f32[64,64]{1,0} get-tuple-element(%while.44), index=1
+}
+"""
+
+
+@pytest.fixture(scope="module")
+def nested_regions():
+    segs = linear_split(parse(NESTED_DOT_HLO))
+    assert len(segs) == 1
+    regions = [segs[0].region]
+    return regions, build_region_arrays(regions)
+
+
+_SYSTEMS = [TPU_V5E, TPU_V3_CORE,
+            default_registry().get("a100"), default_registry().get("b200")]
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("preset", sorted(PRESETS))
+    @pytest.mark.parametrize("system", _SYSTEMS, ids=lambda s: s.name)
+    def test_vector_equals_scalar(self, mixed_regions, preset, system):
+        regions, arrays = mixed_regions
+        est = SystolicEstimator(system, preset)
+        scalar = [est.get_run_time_estimate(r) for r in regions]
+        vector = est.evaluate_batch(arrays)
+        assert vector == scalar          # == on floats: bit-identity
+        assert scalar[0] > 0             # the batch is not trivially zero
+
+    def test_gemm_free_region_is_exact_zero(self, mixed_regions):
+        regions, arrays = mixed_regions
+        est = SystolicEstimator(TPU_V5E, "cocossim")
+        assert est.evaluate_batch(arrays)[-1] == 0.0
+        assert est.get_run_time_estimate(regions[-1]) == 0.0
+
+    def test_dispatch_through_batched_form(self, mixed_regions):
+        regions, arrays = mixed_regions
+        est = SystolicEstimator(TPU_V5E, "scalesim")
+        assert est.get_run_time_estimates(regions, arrays=arrays) == \
+            [est.get_run_time_estimate(r) for r in regions]
+
+    def test_plan_arrays_carry_gemm_dims(self):
+        """End-to-end: ``build_plan`` arrays feed the same fast path."""
+        def f(a, b):
+            return jnp.tanh(a @ b)
+        S = jax.ShapeDtypeStruct
+        txt = jax.jit(f).lower(S((384, 256), jnp.bfloat16),
+                               S((256, 640), jnp.bfloat16)).as_text()
+        plan = build_plan(parse(txt))
+        assert plan.arrays.gemm_exact
+        est = SystolicEstimator(TPU_V5E, "onnxim")
+        assert est.evaluate_batch(plan.arrays) == \
+            [est.get_run_time_estimate(r) for r in plan.compute_regions]
+
+
+class TestDecline:
+    def test_nested_gemm_clears_exact_flag(self, nested_regions):
+        _, arrays = nested_regions
+        assert not arrays.gemm_exact
+
+    @pytest.mark.parametrize("preset", sorted(PRESETS))
+    def test_batch_declined_and_scalar_fallback(self, nested_regions,
+                                                preset):
+        regions, arrays = nested_regions
+        est = SystolicEstimator(TPU_V5E, preset)
+        assert est.evaluate_batch(arrays) is None
+        scalar = [est.get_run_time_estimate(r) for r in regions]
+        assert scalar[0] > 0             # trip-counted dot, not dropped
+        assert est.get_run_time_estimates(regions, arrays=arrays) == scalar
+
+
+class TestThroughCache:
+    def test_cold_batch_matches_scalar(self, mixed_regions):
+        regions, arrays = mixed_regions
+        est = SystolicEstimator(TPU_V5E, "cocossim")
+        cached = CachedEstimator(SystolicEstimator(TPU_V5E, "cocossim"))
+        got = cached.get_run_time_estimates(regions, arrays=arrays)
+        assert got == [est.get_run_time_estimate(r) for r in regions]
+        assert cached.stats.misses == len(regions)
+        assert cached.stats.hits == 0
+
+    def test_declined_batch_takes_loop(self, nested_regions):
+        regions, arrays = nested_regions
+        est = SystolicEstimator(TPU_V5E, "cocossim")
+        cached = CachedEstimator(SystolicEstimator(TPU_V5E, "cocossim"))
+        got = cached.get_run_time_estimates(regions, arrays=arrays)
+        assert got == [est.get_run_time_estimate(r) for r in regions]
+        assert cached.stats.misses == len(regions)

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""CI smoke for the what-if search engine.
+
+Drives both checked-in search specs the way CI means them to be used:
+
+  1. ``python -m repro.search run <spec> --check`` as a real
+     subprocess — the CLI must exit 0 with the frontier matching its
+     golden snapshot (``specs/golden/``) at the snapshot's tolerance;
+  2. an in-process ladder run per spec whose counters must show the
+     optimizer doing its job — candidates pruned below the top rung,
+     top-rung evaluations under half the grid, a non-empty frontier —
+     followed by a brute-force run whose frontier must be identical
+     (prune soundness on the live tree, not just the snapshot);
+  3. a warm re-search through the same Session paying zero cold
+     misses and at least one cache hit.
+
+Exit 1 on any deviation.  Run from the repo root::
+
+    PYTHONPATH=src python tools/search_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro import api  # noqa: E402
+
+SPECS = [os.path.join(REPO, "specs", "search_gemm.json"),
+         os.path.join(REPO, "specs", "search_serving.json")]
+
+
+def fail(msg: str) -> None:
+    print(f"SEARCH-SMOKE FAILURE: {msg}")
+    raise SystemExit(1)
+
+
+def cli_golden_check(spec: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.search", "run", spec,
+         "--check", "--quiet", "--out",
+         os.path.join(REPO, "artifacts", "search-smoke",
+                      os.path.basename(spec))],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        fail(f"CLI --check failed for {spec}:\n"
+             f"{proc.stdout}\n{proc.stderr}")
+    if "golden OK" not in proc.stdout:
+        fail(f"CLI --check for {spec} exited 0 without 'golden OK':\n"
+             f"{proc.stdout}")
+    print(f"  cli --check ok: {os.path.basename(spec)}")
+
+
+def engine_invariants(spec: str) -> None:
+    session = api.Session()
+    ladder = session.search(spec)
+    c = ladder.counters
+
+    pruned = (c["pruned_ceiling"] + c["pruned_intra"]
+              + c["pruned_dominated"])
+    if pruned <= 0:
+        fail(f"{spec}: ladder pruned nothing ({c})")
+    if not ladder.frontier:
+        fail(f"{spec}: empty frontier ({c})")
+    if not 0 < c["top_rung_fraction"] < 0.5:
+        fail(f"{spec}: top-rung fraction {c['top_rung_fraction']} "
+             f"not in (0, 0.5)")
+    if c["top_rung_evaluations"] + pruned + c["infeasible"] \
+            < c["candidates"]:
+        fail(f"{spec}: counters do not account for the grid ({c})")
+
+    brute = api.Session().search(spec, brute_force=True)
+    if brute.frontier != ladder.frontier:
+        fail(f"{spec}: ladder frontier {ladder.frontier} != "
+             f"brute-force frontier {brute.frontier}")
+
+    warm = session.search(spec)
+    if warm.counters["cache_misses"] != 0:
+        fail(f"{spec}: warm re-search paid "
+             f"{warm.counters['cache_misses']} cold misses")
+    if warm.counters["cache_hits"] <= 0:
+        fail(f"{spec}: warm re-search recorded no cache hits")
+    print(f"  engine ok: {os.path.basename(spec)} — "
+          f"{c['frontier_size']} frontier / {c['candidates']} candidates, "
+          f"{pruned} pruned, top rung {c['top_rung_evaluations']} "
+          f"({c['top_rung_fraction']:.0%}), warm misses 0")
+
+
+def main() -> None:
+    for spec in SPECS:
+        cli_golden_check(spec)
+        engine_invariants(spec)
+    print("search smoke: all checks passed")
+
+
+if __name__ == "__main__":
+    main()
