@@ -48,6 +48,7 @@ from __future__ import annotations
 import difflib
 import importlib
 import sys
+import threading
 import warnings
 from dataclasses import dataclass
 
@@ -82,6 +83,7 @@ class BuildContext:
 PLUGIN_GROUP = "repro.backends"
 
 _plugins_scanned = False
+_plugins_lock = threading.Lock()
 _plugin_modules: dict[str, str] = {}    # entry-point name -> module loaded
 _plugin_errors: dict[str, str] = {}     # entry-point name -> why it failed
 
@@ -100,27 +102,34 @@ def discover_plugins(*, force: bool = False) -> dict[str, str]:
     global _plugins_scanned
     if _plugins_scanned and not force:
         return dict(_plugin_modules)
-    _plugins_scanned = True
-    import importlib.metadata as _md
-    try:
-        eps = _md.entry_points(group=PLUGIN_GROUP)
-    except TypeError:       # pragma: no cover — legacy dict API (<3.10)
-        eps = _md.entry_points().get(PLUGIN_GROUP, [])
-    for ep in eps:
-        if ep.name in _plugin_modules:
-            continue
+    # the multithreaded serve daemon hits this from concurrent lookups:
+    # mark scanned only after the scan, under a lock, so a racing
+    # Registry.get/__contains__ blocks here instead of observing a
+    # half-populated vocabulary and raising unknown-kind
+    with _plugins_lock:
+        if _plugins_scanned and not force:
+            return dict(_plugin_modules)
+        import importlib.metadata as _md
         try:
-            ep.load()
-        except Exception as e:  # noqa: BLE001 — isolate broken plugins
-            _plugin_errors[ep.name] = f"{type(e).__name__}: {e}"
-            warnings.warn(
-                f"repro backend plugin {ep.name!r} ({ep.value}) failed "
-                f"to load and was skipped: {_plugin_errors[ep.name]}",
-                RuntimeWarning, stacklevel=2)
-        else:
-            _plugin_modules[ep.name] = ep.value
-            _plugin_errors.pop(ep.name, None)
-    return dict(_plugin_modules)
+            eps = _md.entry_points(group=PLUGIN_GROUP)
+        except TypeError:   # pragma: no cover — legacy dict API (<3.10)
+            eps = _md.entry_points().get(PLUGIN_GROUP, [])
+        for ep in eps:
+            if ep.name in _plugin_modules:
+                continue
+            try:
+                ep.load()
+            except Exception as e:  # noqa: BLE001 — isolate broken plugins
+                _plugin_errors[ep.name] = f"{type(e).__name__}: {e}"
+                warnings.warn(
+                    f"repro backend plugin {ep.name!r} ({ep.value}) failed "
+                    f"to load and was skipped: {_plugin_errors[ep.name]}",
+                    RuntimeWarning, stacklevel=2)
+            else:
+                _plugin_modules[ep.name] = ep.value
+                _plugin_errors.pop(ep.name, None)
+        _plugins_scanned = True
+        return dict(_plugin_modules)
 
 
 def plugin_status() -> dict:

@@ -148,11 +148,21 @@ class SearchSpec:
             raise ValueError(f"search spec: unknown constraints {unknown}; "
                              f"have {list(CONSTRAINT_KEYS)}")
         for k, v in self.constraints.items():
-            if k.startswith("max_") and not (
-                    isinstance(v, (int, float)) and v > 0):
+            if not k.startswith("max_"):
+                continue
+            if not (isinstance(v, (int, float)) and v > 0):
                 raise ValueError(
                     f"search spec: constraint {k} must be a positive "
                     f"number, got {v!r}")
+            # ceilings are enforced on the scored objective vectors, so a
+            # ceiling on an unscored metric would be silently ignored —
+            # reject it instead of returning a frontier that violates it
+            metric = k[len("max_"):]
+            if metric not in self.objectives:
+                raise ValueError(
+                    f"search spec: constraint {k} needs '{metric}' among "
+                    f"the objectives (ceilings are enforced on scored "
+                    f"metrics only); have {list(self.objectives)}")
         self.campaign_for_rung(0).validate(session=session)
 
     # ------------------------------- lowering -------------------------------

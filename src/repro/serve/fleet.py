@@ -431,7 +431,10 @@ class FleetSupervisor:
         its boot-time preloads against the specs' current on-disk
         contents.  In-flight requests are untouched (reload is just one
         more concurrent request per worker; the per-worker plan store
-        only grows or swaps whole entries)."""
+        only grows or swaps whole entries).  The local degraded-mode
+        fallback service, when it has been instantiated, replays its
+        preloads too — otherwise a breaker-open fleet would keep serving
+        the stale specs while reporting a successful reload."""
         reports = []
         for idx in range(self.n):
             w = self._workers[idx]
@@ -450,6 +453,17 @@ class FleetSupervisor:
                 continue
             rep["worker"] = idx
             reports.append(rep)
+        with self._lock:
+            svc = self._local_service
+        if svc is not None:
+            try:
+                rep = svc.reload()
+            except Exception as e:  # noqa: BLE001 — report, don't crash
+                reports.append({"worker": "local-fallback",
+                                "error": f"{type(e).__name__}: {e}"})
+            else:
+                rep["worker"] = "local-fallback"
+                reports.append(rep)
         with self._lock:
             self._counters["reloads"] += 1
         return {"reloaded": sum(1 for r in reports if "plans_built" in r),

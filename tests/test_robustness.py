@@ -479,6 +479,39 @@ class TestBreaker:
         assert not b.is_open(cls)
 
 
+class TestFleetReload:
+    def test_reload_replays_degraded_fallback_preloads(self):
+        """A fleet that has built its local degraded-mode service must
+        replay that service's preloads on /reload too — otherwise
+        breaker-open traffic keeps seeing the stale spec contents while
+        the reload response claims success."""
+        from repro.serve.fleet import FleetSupervisor
+
+        class _StubService:
+            def __init__(self):
+                self.reloads = 0
+
+            def reload(self):
+                self.reloads += 1
+                return {"specs": 1, "workloads": ["w"], "plans_built": 2}
+
+        sup = FleetSupervisor(workers=2)
+        try:
+            svc = _StubService()
+            sup._local_service = svc       # as if a breaker had opened
+            rep = sup.reload_workers()     # no workers were ever spawned
+        finally:
+            sup.httpd.server_close()
+        assert svc.reloads == 1
+        local = [r for r in rep["workers"]
+                 if r.get("worker") == "local-fallback"]
+        assert local == [{"worker": "local-fallback", "specs": 1,
+                          "workloads": ["w"], "plans_built": 2}]
+        # the fallback's replay counts as a reloaded service
+        assert rep["reloaded"] == 1
+        assert sup.stats()["fleet"]["reloads"] == 1
+
+
 class TestStreamFault:
     def test_midstream_reset_breaks_client_but_not_campaign(self):
         """A connection reset mid-NDJSON-stream surfaces as ServeError

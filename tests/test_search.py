@@ -116,6 +116,13 @@ class TestSpecValidation:
         with pytest.raises(ValueError, match="positive"):
             self._spec(constraints={"max_step_time_s": 0})
 
+    def test_ceiling_on_unscored_metric_rejected(self):
+        # ceilings are enforced on the scored objective vectors; a
+        # ceiling on a metric outside the objectives would be silently
+        # ignored, so the spec must couple them
+        with pytest.raises(ValueError, match="among the objectives"):
+            self._spec(constraints={"max_joules_per_step": 1.0})
+
     def test_empty_ladder_rejected(self):
         with pytest.raises(ValueError, match="ladder"):
             self._spec(ladder=[])
